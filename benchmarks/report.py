@@ -1,0 +1,146 @@
+"""Assemble EXPERIMENTS.md from dry-run artifacts + cost-model benchmarks.
+
+  PYTHONPATH=src:. python -m benchmarks.report
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs import SHAPES, all_names, applicable, get
+from repro.core import cost as cost_mod
+from repro.launch import hw, memmodel
+from benchmarks.roofline import RESULTS, derive, fix_note, load_cell, \
+    markdown_table, rows
+
+ROOT = Path(__file__).resolve().parents[1]
+PERF_LOG = ROOT / "results" / "perf_log.md"
+
+
+def repro_section() -> str:
+    s = cost_mod.summary()
+    lines = [
+        "## §Paper-reproduction (faithful baseline)",
+        "",
+        "Validated against the paper's own claims (benchmarks/paper_figures.py"
+        " asserts all of these):",
+        "",
+        "| claim (paper) | reproduced |",
+        "|---|---|",
+        f"| mfmacc 59.4 FLOP/cycle saturated | "
+        f"{s['mfmacc_flop_per_cycle_saturated']:.2f} |",
+        f"| mfmacc 14.9 GFLOP/s @250 MHz | "
+        f"{s['mfmacc_flop_per_cycle_saturated'] * 250e6 / 1e9:.2f} |",
+        f"| 256 MAC-PEP launches at 128x4096 tiles | "
+        f"{s['mfmacc_launches_maxtile']:.0f} |",
+        f"| setup <1% of runtime at max tile | "
+        f"{100 * s['setup_share_maxtile']:.2f}% |",
+        f"| <=1/2 of 128 FLOP/cycle peak (1:1 move:compute) | "
+        f"{s['mfmacc_flop_per_cycle_saturated']:.1f} <= 64 |",
+        f"| beats MPC-Wrapper's 58.1 FLOP/cycle per channel | "
+        f"{s['mfmacc_flop_per_cycle_saturated']:.1f} > 58.1 |",
+        "| mfsub slower than mfadd (emulated via -1 MUL) | "
+        f"{s['sub_flop_per_cycle_saturated']:.1f} < "
+        f"{s['add_flop_per_cycle_saturated']:.1f} FLOP/cyc |",
+        "| mfmax/mfmin/widening unsupported (Table 1) | raise "
+        "UnsupportedOnPIM (tested) |",
+        "| numerics: outer-product == inner-product GEMM | bit-exact strict "
+        "interpreter vs engine; allclose vs fp32 (tests) |",
+        "",
+        "Fig 9 scaling (FLOP/cycle vs K at N=1): "
+        + ", ".join(f"{k}: {cost_mod.mfmacc_cost(128, k, 1).flop_per_cycle:.1f}"
+                    for k in (8, 64, 256, 1024, 2048)),
+        "",
+    ]
+    return "\n".join(lines)
+
+
+def dryrun_section() -> str:
+    lines = [
+        "## §Dry-run",
+        "",
+        "Every live (arch x shape) cell lowered + compiled for BOTH meshes "
+        "(single pod 16x16 = 256 chips; multi-pod 2x16x16 = 512 chips). "
+        "`memory_analysis()` peak is measured on the CPU backend, which "
+        "float-normalizes bf16 ops into f32 temporaries and double-buffers "
+        "concurrent leaf updates — a strict upper bound for the TPU "
+        "deployment.  `analytic GiB` is the dtype-true per-chip residency "
+        "model (launch/memmodel.py).",
+        "",
+        "| arch | shape | step | single ok | multi ok | flops/chip | "
+        "link B/chip | measured GiB | analytic GiB | fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in all_names():
+        cfg = get(arch)
+        for shape in SHAPES:
+            ok, why = applicable(cfg, SHAPES[shape])
+            if not ok:
+                lines.append(f"| {arch} | {shape} | — | SKIP ({why}) | | | "
+                             f"| | | |")
+                continue
+            s = load_cell(arch, shape, "single")
+            m = load_cell(arch, shape, "multi")
+            est = memmodel.estimate(cfg, SHAPES[shape])
+            if not s or not s.get("ok"):
+                lines.append(f"| {arch} | {shape} | ? | **FAIL** | | | | | |")
+                continue
+            lines.append(
+                f"| {arch} | {shape} | {s['step']} | ok ({s['compile_s']}s) "
+                f"| {'ok' if m and m.get('ok') else '?'} "
+                f"| {s['flops']:.3g} "
+                f"| {s['collectives']['total_link_bytes']:.3g} "
+                f"| {s['memory']['peak_bytes_per_device'] / 2**30:.1f} "
+                f"| {est['total'] / 2**30:.1f} "
+                f"| {'yes' if est['fits_16g'] else 'NO'} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def roofline_section() -> str:
+    lines = [
+        "## §Roofline (single-pod 16x16, per chip)",
+        "",
+        "Terms from the trip-count-aware HLO analyzer "
+        "(launch/hloanalysis.py) over the compiled partitioned module; "
+        "hardware: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/link ICI. "
+        "`MODEL/HLO` = 6ND (or 6·N_active·D) / compiled FLOPs; "
+        "`roofline_frac` = useful-compute time / dominant term.",
+        "",
+        markdown_table("single"),
+        "",
+        "### Dominant-term notes (one per cell)",
+        "",
+    ]
+    for d in rows("single"):
+        lines.append(f"- **{d['arch']} x {d['shape']}** ({d['dominant']}): "
+                     f"{fix_note(d)}")
+    lines.append("")
+    return "\n".join(lines)
+
+
+def perf_section() -> str:
+    if PERF_LOG.exists():
+        return PERF_LOG.read_text()
+    return ("## §Perf\n\n(hillclimb log pending — see results/perf_log.md)\n")
+
+
+def main():
+    doc = "\n".join([
+        "# EXPERIMENTS",
+        "",
+        "Generated by `benchmarks/report.py` from `results/dryrun/*.json` "
+        "(produced by `repro.launch.dryrun`) and the calibrated PIM cost "
+        "model.  See DESIGN.md for the system inventory.",
+        "",
+        repro_section(),
+        dryrun_section(),
+        roofline_section(),
+        perf_section(),
+    ])
+    (ROOT / "EXPERIMENTS.md").write_text(doc)
+    print(f"wrote EXPERIMENTS.md ({len(doc.splitlines())} lines)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,79 @@
+"""Benchmark driver.  One section per paper table/figure plus the roofline
+summary (from dry-run artifacts, if present) and kernel micro-checks.
+
+Prints ``name,us_per_call,derived`` CSV.
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run fig8       # one section
+"""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+
+def kernel_microbench():
+    """Pallas kernels (interpret mode on CPU) vs jnp reference — correctness
+    guard + host-time observability; real perf is the TPU target."""
+    import jax.numpy as jnp
+    from repro.kernels import ref
+    from repro.kernels.ame_gemm import ame_gemm
+
+    rows = []
+    rng = np.random.default_rng(0)
+    a = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+    b = jnp.asarray(rng.standard_normal((256, 256)), jnp.float32)
+
+    def timed(fn):
+        fn()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            fn()
+        return (time.perf_counter() - t0) / 3 * 1e6
+
+    t_ref = timed(lambda: ref.gemm(a, b).block_until_ready())
+    t_pal = timed(lambda: ame_gemm(a, b, block_m=128, block_n=128,
+                                   block_k=128, interpret=True
+                                   ).block_until_ready())
+    err = float(jnp.max(jnp.abs(
+        ame_gemm(a, b, block_m=128, block_n=128, block_k=128, interpret=True)
+        - ref.gemm(a, b))))
+    rows.append(("kernel/ame_gemm_256_interpret", t_pal,
+                 f"ref_us={t_ref:.0f} max_err={err:.2e}"))
+    return rows
+
+
+def roofline_summary():
+    try:
+        from benchmarks.roofline import csv_rows
+        rows = csv_rows()
+        return rows if rows else [("roofline/none", 0.0,
+                                   "run launch/dryrun.py first")]
+    except Exception as e:  # dry-run artifacts absent
+        return [("roofline/error", 0.0, str(e)[:120])]
+
+
+def main() -> None:
+    from benchmarks.paper_figures import ALL
+    sections = dict(ALL)
+    sections["kernels"] = kernel_microbench
+    sections["roofline"] = roofline_summary
+
+    wanted = sys.argv[1:] or list(sections)
+    print("name,us_per_call,derived")
+    failures = 0
+    for key in wanted:
+        try:
+            for name, us, derived in sections[key]():
+                print(f"{name},{us:.1f},{derived}")
+        except AssertionError as e:
+            failures += 1
+            print(f"{key}/FAILED,0,{e}")
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,123 @@
+"""Checkpointing: async, atomic, elastic.
+
+* **Async**: `save()` snapshots to host (device_get) and hands the write to
+  a background thread; training continues immediately.
+* **Atomic**: writes land in ``step_XXXX.tmp`` and are renamed only when
+  complete, so a preemption mid-write never corrupts the latest checkpoint.
+* **Elastic**: checkpoints store *logical* (unsharded) arrays + a manifest;
+  `restore()` returns host arrays that the caller ``device_put``s with
+  whatever sharding the *current* mesh prescribes — restart on a different
+  mesh shape reshards transparently.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from pathlib import Path
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                       for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _unflatten(template, flat: Dict[str, np.ndarray]):
+    leaves_p = jax.tree_util.tree_flatten_with_path(template)[0]
+    treedef = jax.tree_util.tree_structure(template)
+    out = []
+    for path, leaf in leaves_p:
+        key = "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                       for k in path)
+        arr = flat[key]
+        assert tuple(arr.shape) == tuple(leaf.shape), \
+            f"{key}: ckpt {arr.shape} vs model {leaf.shape}"
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self.last_saved_step: Optional[int] = None
+
+    # -- save ----------------------------------------------------------------
+
+    def save(self, step: int, state: Any, meta: Optional[Dict] = None,
+             blocking: bool = False) -> None:
+        self.wait()                         # one in-flight write at a time
+        host = _flatten(jax.device_get(state))
+        meta = dict(meta or {}, step=step, time=time.time())
+
+        def write():
+            tmp = self.dir / f"step_{step:08d}.tmp"
+            final = self.dir / f"step_{step:08d}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir()
+            np.savez(tmp / "arrays.npz", **host)
+            (tmp / "meta.json").write_text(json.dumps(meta))
+            if final.exists():              # same step already published
+                shutil.rmtree(tmp)
+            else:
+                os.replace(tmp, final)      # atomic publish
+            self.last_saved_step = step
+            self._gc()
+
+        if blocking:
+            write()
+        else:
+            self._thread = threading.Thread(target=write, daemon=True)
+            self._thread.start()
+
+    def wait(self):
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self):
+        steps = sorted(self.steps())
+        for s in steps[:-self.keep]:
+            shutil.rmtree(self.dir / f"step_{s:08d}", ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+
+    def steps(self):
+        return [int(p.name.split("_")[1]) for p in self.dir.glob("step_*")
+                if not p.name.endswith(".tmp")]
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return max(s) if s else None
+
+    def restore(self, template: Any, step: Optional[int] = None
+                ) -> Tuple[Any, Dict]:
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints in {self.dir}")
+        d = self.dir / f"step_{step:08d}"
+        arrays = dict(np.load(d / "arrays.npz"))
+        meta = json.loads((d / "meta.json").read_text())
+        return _unflatten(template, arrays), meta
+
+    def restore_sharded(self, template: Any, shardings,
+                        step: Optional[int] = None) -> Tuple[Any, Dict]:
+        """Restore and place with the current mesh's shardings (elastic)."""
+        host, meta = self.restore(template, step)
+        placed = jax.tree.map(
+            lambda x, s: jax.device_put(x, s) if s is not None
+            else jax.device_put(x), host, shardings)
+        return placed, meta

@@ -1,0 +1,18 @@
+"""Assigned architecture configs (+ the paper-native PIM config in
+repro.core).  Importing this package registers all archs in base.ARCHS."""
+from repro.configs.base import (  # noqa: F401
+    ARCHS, ArchConfig, Policy, SHAPES, ShapeSpec, applicable, get,
+    all_names, input_specs, register,
+)
+from repro.configs import (  # noqa: F401
+    command_r_35b,
+    deepseek_v3_671b,
+    gemma_2b,
+    hubert_xlarge,
+    internvl2_76b,
+    mamba2_370m,
+    mixtral_8x22b,
+    phi4_mini_3_8b,
+    qwen3_1_7b,
+    zamba2_2_7b,
+)

@@ -1,0 +1,37 @@
+"""Core AME-PIM layer: the paper's contribution, faithful in JAX.
+
+Layers:
+  isa      — AME + Aquabolt-XL PIM instruction sets, Table-1 mapping
+  pim      — strict lock-step interpreter of one pseudo-channel
+  pep      — the four PEP microkernels + tile memory layout (§3.2)
+  cost     — calibrated cycle model (59.4 FLOP/cycle mfmacc headline, §4)
+  engine   — AMEEngine: AME architectural state, pointer table, fast
+             order-exact execution, end-to-end PIM GEMM/GEMV
+"""
+from repro.core.isa import (
+    AMECSRState,
+    AMEOp,
+    AME_TO_PIM,
+    PIMInstr,
+    PIMOpcode,
+    ROWNUM,
+    TILE_MAX_COLS,
+    THEORETICAL_PEAK_FLOP_PER_CYCLE,
+    UnsupportedOnPIM,
+)
+from repro.core.engine import AMEEngine, TileHandle, pim_gemm, pim_gemv
+from repro.core.cost import (
+    PEPCostReport,
+    elementwise_cost,
+    max_tile_mfmacc,
+    mfmacc_cost,
+    saturated_flop_per_cycle,
+)
+
+__all__ = [
+    "AMECSRState", "AMEOp", "AME_TO_PIM", "PIMInstr", "PIMOpcode",
+    "ROWNUM", "TILE_MAX_COLS", "THEORETICAL_PEAK_FLOP_PER_CYCLE",
+    "UnsupportedOnPIM", "AMEEngine", "TileHandle", "pim_gemm", "pim_gemv",
+    "PEPCostReport", "elementwise_cost", "max_tile_mfmacc", "mfmacc_cost",
+    "saturated_flop_per_cycle",
+]

@@ -1,0 +1,295 @@
+"""AMEEngine — executes AME instructions on the PIM model (paper §3.2/3.3).
+
+The engine holds the AME architectural state (tile registers tr0-tr3,
+accumulation registers acc0-acc3, the mtilem/k/n CSRs) and the paper's
+pointer table: registers are *memory-resident* handles, and data-movement
+instructions (load/store/move/transpose/pack/slide) resolve to pointer/layout
+updates, not copies (paper §3.2.6).
+
+Numeric execution uses the fast JAX path below — vectorized but *order-exact*
+with the hardware: FP16 rounding after the multiplier and adder stages, k
+walked in ascending order per output column, exactly like the MAC-PEP.  It is
+cross-validated bit-exactly against the strict interpreter
+(:mod:`repro.core.pim`) in the test suite.
+
+Cost accounting uses :mod:`repro.core.cost`; every instruction returns and
+accumulates a :class:`PEPCostReport`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost as cost_mod
+from repro.core.isa import (
+    AMECSRState,
+    AMEOp,
+    ROWNUM,
+    TILE_MAX_COLS,
+    UnsupportedOnPIM,
+    pim_mapping,
+)
+
+F16 = jnp.float16
+
+
+# ---------------------------------------------------------------------------
+# Fast, order-exact numeric semantics (jitted)
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _ew_add(a, b):
+    return (a.astype(F16) + b.astype(F16)).astype(F16)
+
+
+@jax.jit
+def _ew_mul(a, b):
+    return (a.astype(F16) * b.astype(F16)).astype(F16)
+
+
+@jax.jit
+def _ew_sub(a, b):
+    # emulated: a + (-1)*b, with FP16 rounding after the MUL stage (SUB-PEP)
+    nb = (b.astype(F16) * F16(-1.0)).astype(F16)
+    return (a.astype(F16) + nb).astype(F16)
+
+
+@jax.jit
+def _mac_outer(acc, a, b):
+    """acc(m,n) += A(m,k) @ B(k,n), FP16, ascending-k outer products.
+
+    One scan step == one MAC instruction's effect across all columns: the
+    MAC is a fused multiply-accumulate (paper §2.3.1), so the product+add
+    round *once* at register writeback — modeled as exact f32 arithmetic
+    rounded to FP16 per k-step.  Bit-exact with the strict interpreter.
+    """
+    a = a.astype(F16).astype(jnp.float32)
+    b = b.astype(F16).astype(jnp.float32)
+
+    def step(carry, ab):
+        col, row = ab                       # col: (m,), row: (n,)
+        out = (carry.astype(jnp.float32)
+               + col[:, None] * row[None, :]).astype(F16)
+        return out, None
+
+    out, _ = jax.lax.scan(step, acc.astype(F16), (a.T, b))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Memory-resident register handles + pointer table
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TileHandle:
+    """A tile/accumulator register: pointer-table entry + layout metadata.
+
+    ``data`` is the logical (rows, cols) array; ``transposed`` marks a
+    pending zero-copy transpose (mld.t / mmov.t) that downstream consumers
+    fold into their access pattern; ``row_off``/``col_off`` implement slide
+    and pack as view updates.
+    """
+
+    data: jnp.ndarray
+    transposed: bool = False
+    row_off: int = 0
+    col_off: int = 0
+
+    def resolve(self) -> jnp.ndarray:
+        d = self.data
+        if self.transposed:
+            d = d.T
+        if self.row_off or self.col_off:
+            d = d[self.row_off:, self.col_off:]
+        return d
+
+    @property
+    def shape(self) -> Tuple[int, int]:
+        r, c = self.data.shape
+        if self.transposed:
+            r, c = c, r
+        return (r - self.row_off, c - self.col_off)
+
+
+class AMEEngine:
+    """Executes the AME instruction subset of paper Table 1 on HBM-PIM.
+
+    ``channels`` > 1 models the multi-pseudo-channel scaling of the paper's
+    future work: row-blocks of a larger operand are striped across channels
+    that run the identical command stream in parallel (cycles unchanged,
+    FLOPs scaled) — the same lock-step philosophy one level up.
+    """
+
+    def __init__(self, channels: int = 1):
+        self.channels = channels
+        self.csr = AMECSRState()
+        self.tr: Dict[int, Optional[TileHandle]] = {i: None for i in range(4)}
+        self.acc: Dict[int, Optional[TileHandle]] = {i: None for i in range(4)}
+        self.total_cycles = 0.0
+        self.total_flops = 0
+        self.log: List[cost_mod.PEPCostReport] = []
+
+    # -- configuration (msettile*) ------------------------------------------
+
+    def msettilem(self, m: int) -> int:
+        return self.csr.msettilem(m)
+
+    def msettilek(self, k: int) -> int:
+        return self.csr.msettilek(k)
+
+    def msettilen(self, n: int) -> int:
+        return self.csr.msettilen(n)
+
+    def mrelease(self) -> None:
+        for i in range(4):
+            self.tr[i] = None
+            self.acc[i] = None
+
+    # -- load/store & misc: pointer-table ops, zero cycle charge ------------
+
+    def mld(self, reg: int, a: jnp.ndarray) -> None:
+        assert a.ndim == 2 and a.shape[0] <= ROWNUM and a.shape[1] <= TILE_MAX_COLS, \
+            f"tile {a.shape} exceeds {ROWNUM}x{TILE_MAX_COLS}"
+        self.tr[reg] = TileHandle(jnp.asarray(a, F16))
+
+    def mld_t(self, reg: int, a: jnp.ndarray) -> None:
+        """Transposed load — resolved by pointer/layout update (§3.2.6)."""
+        self.tr[reg] = TileHandle(jnp.asarray(a, F16), transposed=True)
+
+    def mld_acc(self, reg: int, a: jnp.ndarray) -> None:
+        self.acc[reg] = TileHandle(jnp.asarray(a, F16))
+
+    def mst(self, reg: int) -> jnp.ndarray:
+        return self.acc[reg].resolve()
+
+    def mmov(self, dst: int, src: int) -> None:
+        self.tr[dst] = dataclasses.replace(self.tr[src])
+
+    def mslide(self, reg: int, rows: int = 0, cols: int = 0) -> None:
+        h = self.tr[reg]
+        self.tr[reg] = dataclasses.replace(h, row_off=h.row_off + rows,
+                                           col_off=h.col_off + cols)
+
+    def mbc_v(self, reg: int, v: jnp.ndarray, rows: int) -> None:
+        """Broadcast a row vector to all tile rows (mbc.v)."""
+        self.tr[reg] = TileHandle(jnp.broadcast_to(
+            jnp.asarray(v, F16)[None, :], (rows, v.shape[-1])))
+
+    # -- arithmetic ----------------------------------------------------------
+
+    def _active_mk(self, h: TileHandle) -> Tuple[int, int]:
+        r, c = h.shape
+        return min(r, self.csr.mtilem), min(c, self.csr.mtilek)
+
+    def _charge(self, rep: cost_mod.PEPCostReport) -> cost_mod.PEPCostReport:
+        if self.channels > 1:
+            rep = rep.scaled(self.channels)
+        self.total_cycles += rep.cycles
+        self.total_flops += rep.flops
+        self.log.append(rep)
+        return rep
+
+    def _ew(self, op: AMEOp, kind: str, fn, dst: int, a: int, b) -> cost_mod.PEPCostReport:
+        pim_mapping(op)  # raises UnsupportedOnPIM for max/min/widening
+        ha = self.tr[a]
+        m, k = self._active_mk(ha)
+        av = ha.resolve()[:m, :k]
+        if isinstance(b, int):                       # .mm form
+            bv = self.tr[b].resolve()[:m, :k]
+        else:                                        # .mv.i form: row vector
+            bv = jnp.broadcast_to(jnp.asarray(b, F16)[None, :k], (m, k))
+        self.acc[dst] = TileHandle(fn(av, bv))
+        return self._charge(cost_mod.elementwise_cost(kind, m, k))
+
+    def mfadd(self, dst: int, a: int, b) -> cost_mod.PEPCostReport:
+        op = AMEOp.MFADD_MM if isinstance(b, int) else AMEOp.MFADD_MV
+        return self._ew(op, "add", _ew_add, dst, a, b)
+
+    def mfsub(self, dst: int, a: int, b) -> cost_mod.PEPCostReport:
+        op = AMEOp.MFSUB_MM if isinstance(b, int) else AMEOp.MFSUB_MV
+        return self._ew(op, "sub", _ew_sub, dst, a, b)
+
+    def mfmul(self, dst: int, a: int, b) -> cost_mod.PEPCostReport:
+        op = AMEOp.MFMUL_MM if isinstance(b, int) else AMEOp.MFMUL_MV
+        return self._ew(op, "mul", _ew_mul, dst, a, b)
+
+    def mfmax(self, dst: int, a: int, b) -> cost_mod.PEPCostReport:
+        pim_mapping(AMEOp.MFMAX_MM if isinstance(b, int) else AMEOp.MFMAX_MV)
+        raise AssertionError("unreachable")
+
+    def mfmin(self, dst: int, a: int, b) -> cost_mod.PEPCostReport:
+        pim_mapping(AMEOp.MFMIN_MM if isinstance(b, int) else AMEOp.MFMIN_MV)
+        raise AssertionError("unreachable")
+
+    def mfmacc(self, dst: int, a: int, b: int,
+               widen: bool = False) -> cost_mod.PEPCostReport:
+        """acc(dst) += tr(a) @ tr(b) — the reduction-free outer-product path."""
+        if widen:
+            pim_mapping(AMEOp.MFMACC_WIDEN)
+        pim_mapping(AMEOp.MFMACC)
+        ha, hb = self.tr[a], self.tr[b]
+        m = min(ha.shape[0], self.csr.mtilem)
+        k = min(ha.shape[1], hb.shape[0], self.csr.mtilek)
+        n = min(hb.shape[1], self.csr.mtilen)
+        av = ha.resolve()[:m, :k]
+        bv = hb.resolve()[:k, :n]
+        acc = self.acc[dst]
+        if acc is None or acc.shape != (m, n):
+            acc = TileHandle(jnp.zeros((m, n), F16))
+        self.acc[dst] = TileHandle(_mac_outer(acc.resolve()[:m, :n], av, bv))
+        return self._charge(cost_mod.mfmacc_cost(m, k, n))
+
+
+# ---------------------------------------------------------------------------
+# End-to-end blocked GEMM/GEMV in PIM mode (paper's "end-to-end execution")
+# ---------------------------------------------------------------------------
+
+
+def pim_gemm(a: jnp.ndarray, b: jnp.ndarray,
+             channels: int = 1) -> Tuple[jnp.ndarray, AMEEngine]:
+    """C = A @ B executed entirely as AME mfmacc tiles on the PIM engine.
+
+    Blocks A (M,K) and B (K,N) into <=128x4096 / <=4096x... tiles; rows of
+    the M dimension beyond 128 are striped across pseudo-channels first
+    (lock-step command reuse), then walked sequentially.  Returns the FP16
+    result and the engine (with its cycle/flop ledger).
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    eng = AMEEngine(channels=channels)
+    bm, bk, bn = ROWNUM, TILE_MAX_COLS, ROWNUM
+    out = np.zeros((m, n), np.float16)
+    for i0 in range(0, m, bm):
+        i1 = min(i0 + bm, m)
+        for j0 in range(0, n, bn):
+            j1 = min(j0 + bn, n)
+            eng.acc[0] = None
+            eng.msettilem(i1 - i0)
+            eng.msettilen(j1 - j0)
+            for c0 in range(0, k, bk):
+                c1 = min(c0 + bk, k)
+                eng.msettilek(c1 - c0)
+                eng.mld(0, a[i0:i1, c0:c1])
+                # B block enters as an (n x k) tile register consumed through
+                # the pointer table's transposed view (mld.t, paper §3.2.6) —
+                # this is what produces the K-major dense scalar layout the
+                # MAC-PEP broadcasts from.
+                eng.mld_t(1, jnp.asarray(b[c0:c1, j0:j1]).T)
+                eng.mfmacc(0, 0, 1)
+            out[i0:i1, j0:j1] = np.asarray(eng.mst(0))
+    return jnp.asarray(out), eng
+
+
+def pim_gemv(a: jnp.ndarray, x: jnp.ndarray,
+             channels: int = 1) -> Tuple[jnp.ndarray, AMEEngine]:
+    """y = A @ x in PIM mode (the MPC-Wrapper comparison workload)."""
+    y, eng = pim_gemm(a, x[:, None], channels=channels)
+    return y[:, 0], eng

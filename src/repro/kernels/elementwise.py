@@ -1,0 +1,59 @@
+"""Fused elementwise PEP kernel (ADD/MUL/SUB-PEP on TPU).
+
+The PIM elementwise PEPs are bound by a 2:1 / 3:1 data-movement-to-compute
+command ratio (paper §4.2: fill + op + mov per window).  On TPU the same
+workload is pure HBM-bandwidth-bound, so the adaptation is a *fused* VPU
+kernel: one HBM read per operand, one write, with the arithmetic — and the
+optional activation the PIM MOV can apply on the fly (§2.3.2) — folded into
+the single pass.  This is exactly the paper's proposed mitigation
+("fusing multiple instructions, combining operand loading and arithmetic").
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+DEFAULT_BM = 256
+DEFAULT_BC = 512
+
+_OPS = {
+    "add": lambda a, b: a + b,
+    "sub": lambda a, b: a - b,
+    "mul": lambda a, b: a * b,
+}
+
+
+def _ew_kernel(a_ref, b_ref, o_ref, *, kind: str, relu: bool):
+    o = _OPS[kind](a_ref[...], b_ref[...])
+    if relu:  # activation fused into the writeback (the PIM MOV+ReLU path)
+        o = jnp.maximum(o, 0)
+    o_ref[...] = o
+
+
+@functools.partial(jax.jit, static_argnames=("kind", "relu", "block_m",
+                                             "block_c", "interpret"))
+def ame_elementwise(a: jnp.ndarray, b: jnp.ndarray, *, kind: str = "add",
+                    relu: bool = False, block_m: int = DEFAULT_BM,
+                    block_c: int = DEFAULT_BC,
+                    interpret: bool = False) -> jnp.ndarray:
+    """Elementwise mfadd/mfsub/mfmul over (m, c) tiles, optionally +ReLU."""
+    assert a.shape == b.shape and a.ndim == 2
+    m, c = a.shape
+    bm, bc = min(block_m, m), min(block_c, c)
+    pm, pc = (-m) % bm, (-c) % bc
+    if pm or pc:
+        a = jnp.pad(a, ((0, pm), (0, pc)))
+        b = jnp.pad(b, ((0, pm), (0, pc)))
+    out = pl.pallas_call(
+        functools.partial(_ew_kernel, kind=kind, relu=relu),
+        grid=(a.shape[0] // bm, a.shape[1] // bc),
+        in_specs=[pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+                  pl.BlockSpec((bm, bc), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(a.shape, a.dtype),
+        interpret=interpret,
+    )(a, b)
+    return out[:m, :c]

@@ -1,0 +1,82 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness references).
+
+Each function is the semantic specification its kernel is tested against
+(interpret=True) across shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def gemm(a: jnp.ndarray, b: jnp.ndarray,
+         out_dtype=None) -> jnp.ndarray:
+    """C = A @ B with f32 accumulation (the ame_gemm oracle)."""
+    out_dtype = out_dtype or a.dtype
+    return jnp.matmul(a, b, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def elementwise(kind: str, a: jnp.ndarray, b: jnp.ndarray,
+                relu: bool = False) -> jnp.ndarray:
+    """mfadd/mfsub/mfmul semantics; optional fused ReLU-on-writeback
+    (the PIM data-movement activation capability, paper §2.3.2)."""
+    if kind == "add":
+        o = a + b
+    elif kind == "sub":
+        o = a - b
+    elif kind == "mul":
+        o = a * b
+    else:
+        raise ValueError(kind)
+    return jax.nn.relu(o) if relu else o
+
+
+def ssd_scan(x: jnp.ndarray, log_a: jnp.ndarray, b: jnp.ndarray,
+             c: jnp.ndarray) -> jnp.ndarray:
+    """Mamba2 SSD reference: sequential recurrence over time.
+
+      S_t = exp(log_a_t) * S_{t-1} + b_t (outer) x_t        (N, P) state
+      y_t = c_t @ S_t
+
+    Shapes: x (T, P), log_a (T,), b (T, N), c (T, N) -> y (T, P).
+    The state update IS the paper's reduction-free outer-product
+    accumulation — rank-1 updates into a resident accumulator.
+    """
+    t, p = x.shape
+    n = b.shape[-1]
+
+    def step(s, inp):
+        xt, lat, bt, ct = inp
+        s = jnp.exp(lat) * s + bt[:, None] * xt[None, :]
+        return s, ct @ s
+
+    s0 = jnp.zeros((n, p), jnp.float32)
+    _, y = jax.lax.scan(step, s0, (x.astype(jnp.float32),
+                                   log_a.astype(jnp.float32),
+                                   b.astype(jnp.float32),
+                                   c.astype(jnp.float32)))
+    return y.astype(x.dtype)
+
+
+def attention(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+              causal: bool = True, window: int = 0,
+              scale: float | None = None) -> jnp.ndarray:
+    """Naive softmax attention. q (Tq, D), k/v (Tk, D); Tq aligned to the
+    *end* of the kv sequence (decode: Tq=1, Tk=cache length).
+
+    window > 0 = sliding-window attention (each query sees the last
+    ``window`` keys)."""
+    tq, d = q.shape
+    tk = k.shape[0]
+    scale = scale if scale is not None else d ** -0.5
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) * scale
+    qpos = jnp.arange(tq)[:, None] + (tk - tq)
+    kpos = jnp.arange(tk)[None, :]
+    mask = jnp.ones((tq, tk), bool)
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,374 @@
+"""Static analyzer for post-SPMD HLO: trip-count-aware FLOPs, HBM traffic,
+and per-chip collective link bytes — the §Roofline term extractor.
+
+Why not ``compiled.cost_analysis()``: XLA counts while-loop bodies ONCE,
+but every layer scan / microbatch scan / KV-chunk scan is a counted loop.
+We parse ``compiled.as_text()`` structurally instead:
+
+* computations -> instructions (with a per-computation symbol table of
+  operand shapes, so `dot` contraction sizes are resolvable);
+* a call-graph walk (while/fusion/call/conditional/reduce/sort/scatter)
+  propagates an execution multiplier, reading loop trip counts from the
+  ``known_trip_count`` backend_config XLA attaches to counted loops;
+* FLOPs: 2*prod(out)*prod(contracted) for dots; 1 op/elem for arithmetic
+  elementwise/reduce ops;
+* HBM bytes: for every *top-level* instruction in sequential computations
+  (entry, loop bodies, branches), bytes = output + operand sizes — fusion
+  boundaries are exactly the materialization points on TPU;
+* collectives: ring-model link bytes x multiplier.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import re
+from typing import Dict, List, Optional, Tuple
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1,
+               "f8e5m2": 1, "f8e4m3": 1, "f8e5m2fnuz": 1, "f8e4m3fnuz": 1,
+               "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+               "s8": 1, "u8": 1, "s4": 1, "u4": 1, "pred": 1, "c64": 8,
+               "c128": 16, "token": 0, "opaque": 0}
+
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(DTYPE_BYTES) + r")\[([0-9,]*)\](?:\{[^}]*\})?")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"^((?:\([^)]*\)|[\w\[\]{},.\- ])*?)\s*([\w\-]+)\(")
+# match only the computation name before its parameter list — params may
+# contain tuple types with nested parens (every while body does)
+_COMP_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_CALLED_ONE_RE = re.compile(r"(?:calls|to_apply|body|condition)=%?([\w.\-]+)")
+_CALLED_MANY_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+
+
+def _called_names(line: str):
+    names = [m.group(1) for m in _CALLED_ONE_RE.finditer(line)]
+    for m in _CALLED_MANY_RE.finditer(line):
+        names.extend(n.strip().lstrip("%") for n in m.group(1).split(","))
+    return names
+_TRIP_RE = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]<=")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+
+ELEMENTWISE_OPS = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "log", "rsqrt", "sqrt", "tanh", "negate", "abs",
+    "exponential-minus-one", "log-plus-one", "cosine", "sine", "logistic",
+    "floor", "ceil", "round-nearest-afz", "clamp", "select", "compare",
+    "and", "or", "xor", "not", "remainder", "atan2", "cbrt", "erf",
+}
+REDUCE_OPS = {"reduce", "reduce-window"}
+NO_TRAFFIC_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "after-all", "partition-id", "replica-id", "iota",
+    "rng-get-and-update-state", "opt-barrier", "custom-call",
+}
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+def _shape_elems(m) -> int:
+    dims = m.group(2)
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+def _shape_bytes(m) -> int:
+    return _shape_elems(m) * DTYPE_BYTES[m.group(1)]
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    out_part: str
+    rest: str
+    line: str
+
+    def out_bytes(self) -> int:
+        return sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(self.out_part))
+
+    def out_elems(self) -> int:
+        return sum(_shape_elems(m) for m in _SHAPE_RE.finditer(self.out_part))
+
+    def out_dims(self) -> List[int]:
+        m = _SHAPE_RE.search(self.out_part)
+        if not m or not m.group(2):
+            return []
+        return [int(d) for d in m.group(2).split(",") if d]
+
+    def operands(self) -> List[str]:
+        m = re.search(rf"\b{re.escape(self.op)}\(", self.line)
+        if not m:
+            return []
+        depth, args, cur = 0, [], []
+        for ch in self.line[m.end() - 1:]:
+            if ch == "(":
+                depth += 1
+                if depth == 1:
+                    continue
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args.append("".join(cur))
+                    break
+            if depth >= 1:
+                cur.append(ch)
+        names = []
+        for a in "".join(args).split(","):
+            mm = re.search(r"%([\w.\-]+)", a)
+            if mm:
+                names.append(mm.group(1))
+        return names
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: List[Instr]
+    shapes: Dict[str, str]           # symbol -> out_part (type text)
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if not line:
+            continue
+        if not line.startswith(" ") and (line.startswith("ENTRY")
+                                         or line.startswith("%")) \
+                and line.endswith("{"):
+            m = _COMP_HEADER_RE.match(line)
+            if m:
+                cur = Computation(m.group(1), [], {})
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    comps["__entry__"] = cur
+            continue
+        if line.strip() == "}":
+            continue
+        if cur is None:
+            continue
+        im = _INSTR_RE.match(line)
+        if not im:
+            continue
+        name, rhs = im.group(1), im.group(2)
+        om = _OP_RE.match(rhs)
+        if om:
+            out_part, op = om.group(1), om.group(2)
+        else:
+            # ops without parens are rare; classify as unknown
+            out_part, op = rhs, "unknown"
+        cur.instrs.append(Instr(name, op, out_part, rhs, line))
+        cur.shapes[name] = out_part
+    return comps
+
+
+def _multipliers(comps: Dict[str, Computation]) -> Dict[str, float]:
+    """Execution-count multiplier per computation via call-graph walk."""
+    mult: Dict[str, float] = {}
+    entry = comps.get("__entry__")
+    if entry is None:
+        return {}
+
+    def visit(comp: Computation, m: float):
+        if m <= mult.get(comp.name, 0):
+            return
+        mult[comp.name] = m
+        for ins in comp.instrs:
+            called = _called_names(ins.line)
+            if not called:
+                continue
+            child_m = m
+            if ins.op == "while":
+                tm = _TRIP_RE.search(ins.line)
+                child_m = m * (int(tm.group(1)) if tm else 1)
+            for cn in called:
+                if cn in comps:
+                    visit(comps[cn], child_m)
+
+    visit(entry, 1.0)
+    return mult
+
+
+def _dot_flops(ins: Instr, comp: Computation) -> float:
+    out = ins.out_dims()
+    cdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.line)
+    ops = ins.operands()
+    if not ops:
+        return 0.0
+    lhs_part = comp.shapes.get(ops[0], "")
+    lm = _SHAPE_RE.search(lhs_part)
+    if lm is None:
+        return 2.0 * math.prod(out) if out else 0.0
+    lhs_dims = [int(d) for d in lm.group(2).split(",") if d]
+    contracted = 1
+    if cdims and cdims.group(1):
+        for d in cdims.group(1).split(","):
+            contracted *= lhs_dims[int(d)]
+    return 2.0 * math.prod(out) * contracted if out else 0.0
+
+
+def _collective_link_bytes(ins: Instr) -> Tuple[str, float]:
+    op = ins.op.replace("-start", "")
+    out_b = ins.out_bytes()
+    in_m = _SHAPE_RE.finditer(ins.rest[ins.rest.find("("):]
+                              if "(" in ins.rest else "")
+    in_b = sum(_shape_bytes(m) for m in in_m)
+    gm = _GROUPS_IOTA_RE.search(ins.line)
+    if gm:
+        n = int(gm.group(2))
+    else:
+        gl = _GROUPS_LIST_RE.search(ins.line)
+        n = len(gl.group(1).split(",")) if gl else 1
+    if n <= 1:
+        return op, 0.0
+    frac = (n - 1) / n
+    if op == "all-reduce":
+        return op, 2 * out_b * frac
+    if op == "all-gather":
+        return op, out_b * frac
+    if op == "reduce-scatter":
+        return op, max(in_b, out_b) * frac
+    if op == "all-to-all":
+        return op, out_b * frac
+    return op, float(out_b)          # collective-permute
+
+
+@dataclasses.dataclass
+class HLOReport:
+    flops: float = 0.0
+    dot_flops: float = 0.0
+    hbm_bytes: float = 0.0
+    collective_link_bytes: float = 0.0
+    #: link bytes with f32-promoted bf16 collectives counted at bf16 width —
+    #: XLA CPU float-normalization promotes bf16 cross-replica reductions to
+    #: f32 (convert -> collective -> convert); TPU runs them native bf16
+    collective_link_bytes_bf16: float = 0.0
+    collectives: Dict[str, Dict[str, float]] = dataclasses.field(
+        default_factory=dict)
+    unknown_trip_loops: int = 0
+    n_instructions: int = 0
+
+    def to_dict(self):
+        return dataclasses.asdict(self)
+
+
+def _promoted_from_bf16(ins: Instr, comp: Computation,
+                        comps: Dict[str, Computation]) -> bool:
+    """True if this f32 collective's operand is a convert-from-bf16 (directly
+    or as a fusion whose root is such a convert)."""
+    if "f32[" not in ins.out_part:
+        return False
+    for opd in ins.operands():
+        d = next((i for i in comp.instrs if i.name == opd), None)
+        if d is None:
+            continue
+        if d.op == "convert":
+            inner = d.rest[d.rest.find("("):]
+            if "bf16[" in inner:
+                return True
+            # operand shape not inline: resolve via symbol table
+            for o2 in d.operands():
+                if "bf16[" in comp.shapes.get(o2, ""):
+                    return True
+        if d.op == "fusion":
+            for cn in _called_names(d.line):
+                fc = comps.get(cn)
+                if fc and fc.instrs:
+                    root = fc.instrs[-1]
+                    if root.op == "convert":
+                        for o2 in root.operands():
+                            if "bf16[" in fc.shapes.get(o2, ""):
+                                return True
+    return False
+
+
+#: computations reached via fusion/reduce/etc. whose instrs are *inside* a
+#: kernel — they contribute flops but not top-level HBM traffic
+_SEQUENTIAL_CALLERS = {"while", "conditional", "call", "async-start"}
+
+
+def analyze(text: str) -> HLOReport:
+    comps = parse_hlo(text)
+    mult = _multipliers(comps)
+    rep = HLOReport(collectives={op: {"count": 0, "link_bytes": 0.0}
+                                 for op in COLLECTIVES})
+
+    # classify computations: sequential (entry/loop bodies/branches/calls)
+    # vs fused (fusion/reduce/sort/scatter bodies)
+    seq = {comps["__entry__"].name} if "__entry__" in comps else set()
+    for comp in comps.values():
+        for ins in comp.instrs:
+            if ins.op in _SEQUENTIAL_CALLERS or ins.op == "while":
+                for nm in _called_names(ins.line):
+                    seq.add(nm)
+
+    seen = set()
+    for comp in comps.values():
+        if comp.name in seen:
+            continue
+        seen.add(comp.name)
+        m = mult.get(comp.name, 0.0)
+        if m <= 0:
+            continue
+        sequential = comp.name in seq
+        for ins in comp.instrs:
+            rep.n_instructions += 1
+            op = ins.op
+            if op == "dot":
+                df = m * _dot_flops(ins, comp)
+                rep.dot_flops += df
+                rep.flops += df
+            elif op in ELEMENTWISE_OPS:
+                rep.flops += m * ins.out_elems()
+            elif op in REDUCE_OPS:
+                rep.flops += m * ins.out_elems()
+            elif op == "while" and not _TRIP_RE.search(ins.line):
+                rep.unknown_trip_loops += 1
+            base = op.replace("-start", "")
+            if base in COLLECTIVES and not op.endswith("-done"):
+                kind, link = _collective_link_bytes(ins)
+                rep.collectives[kind]["count"] += m
+                rep.collectives[kind]["link_bytes"] += m * link
+                rep.collective_link_bytes += m * link
+                corr = 0.5 if _promoted_from_bf16(ins, comp, comps) else 1.0
+                rep.collective_link_bytes_bf16 += m * link * corr
+            if sequential and op not in NO_TRAFFIC_OPS \
+                    and not op.endswith("-done"):
+                # CPU-only float-normalization artifacts: single-operand
+                # convert/copy-of-bf16 fusions would not exist on TPU
+                opds = ins.operands()
+                if op == "fusion" and len(opds) <= 1 and \
+                        re.match(r"^(convert|copy)[._]", ins.name):
+                    continue
+                io = ins.out_bytes()
+                sizes = []
+                for opd in opds:
+                    part = comp.shapes.get(opd)
+                    if part:
+                        s = sum(_shape_bytes(sm)
+                                for sm in _SHAPE_RE.finditer(part))
+                        sizes.append(s)
+                        io += s
+                # in-place cache/carry updates: a dynamic-update-slice (or a
+                # fusion rooted in one — scan-carry writes) reads and writes
+                # only the updated slot, not the whole buffer (XLA aliases
+                # the operand); drop the 2x full-buffer count
+                if ("dynamic-update-slice" in ins.op
+                        or ins.name.startswith("dynamic-update-slice")
+                        or "dynamic_update_slice" in ins.line):
+                    if sizes:
+                        io = max(io - 2 * max(sizes), 0)
+                rep.hbm_bytes += m * io
+    return rep
+
+
+def analyze_compiled(compiled) -> HLOReport:
+    return analyze(compiled.as_text())

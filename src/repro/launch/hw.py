@@ -1,0 +1,8 @@
+"""Target-hardware constants (TPU v5e per chip) for roofline terms."""
+
+PEAK_FLOPS = 197e12          # bf16 FLOP/s per chip
+HBM_BW = 819e9               # bytes/s per chip
+ICI_BW = 50e9                # bytes/s per link
+HBM_BYTES = 16 * 2 ** 30     # capacity per chip
+CHIPS_SINGLE_POD = 256
+CHIPS_MULTI_POD = 512

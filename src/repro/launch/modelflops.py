@@ -1,0 +1,43 @@
+"""Analytic MODEL_FLOPS per cell: 6*N*D train / 2*N*D inference, with
+N_active for MoE — the §Roofline 'useful compute' yardstick."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.configs.base import ArchConfig, ShapeSpec
+from repro.launch.params import param_shapes
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                    for k in path)
+
+
+def active_params(cfg: ArchConfig) -> int:
+    """Non-embedding parameters, with routed experts scaled by top_k/E."""
+    shapes = param_shapes(cfg)
+    total = 0
+    for path, leaf in jax.tree_util.tree_flatten_with_path(shapes)[0]:
+        pstr = _path_str(path)
+        n = math.prod(leaf.shape)
+        if "embed/table" in pstr or "head/w" in pstr:
+            continue
+        if cfg.moe and "experts/" in pstr:
+            n = int(n * cfg.moe.top_k / cfg.moe.num_experts)
+        total += n
+    return total
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeSpec) -> float:
+    """Whole-step useful FLOPs (all chips)."""
+    n = active_params(cfg)
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        if cfg.modality == "vision_text":
+            tokens = shape.global_batch * shape.seq_len  # patches+text = seq
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        return 2.0 * n * shape.global_batch * shape.seq_len
+    return 2.0 * n * shape.global_batch        # decode: one token per seq

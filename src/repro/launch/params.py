@@ -1,0 +1,24 @@
+"""Parameter accounting without allocation (eval_shape over init)."""
+from __future__ import annotations
+
+import math
+
+import jax
+
+from repro.configs.base import ArchConfig
+from repro.models import model as lm
+
+
+def param_shapes(cfg: ArchConfig):
+    """Abstract pytree of parameter ShapeDtypeStructs (no allocation)."""
+    return jax.eval_shape(lambda k: lm.init(cfg, k), jax.random.PRNGKey(0))
+
+
+def count_params(cfg: ArchConfig) -> int:
+    return sum(math.prod(x.shape)
+               for x in jax.tree_util.tree_leaves(param_shapes(cfg)))
+
+
+def param_bytes(cfg: ArchConfig) -> int:
+    return sum(math.prod(x.shape) * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(param_shapes(cfg)))

@@ -1,0 +1,203 @@
+"""AdamW with large-scale memory policies, pure JAX.
+
+Moment storage is policy-driven (configs.base.Policy):
+  * moment_dtype: float32 | bfloat16 | int8   (int8 = blockwise-quantized
+    8-bit Adam a la Dettmers: per-row absmax scales, error bounded by the
+    row dynamic range — what lets the 671B config fit a single pod)
+  * factored_v: Adafactor-style rank-1 second moment for >=2D tensors.
+
+Also: global-norm clipping, decoupled weight decay with a mask, linear
+warmup + cosine decay schedule.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    peak_lr: float = 3e-4
+    end_lr_frac: float = 0.1
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    moment_dtype: str = "float32"
+    factored_v: bool = False
+
+
+def schedule(c: AdamWConfig, step):
+    step = step.astype(jnp.float32)
+    warm = c.peak_lr * step / max(c.warmup_steps, 1)
+    prog = jnp.clip((step - c.warmup_steps)
+                    / max(c.total_steps - c.warmup_steps, 1), 0.0, 1.0)
+    cos = c.peak_lr * (c.end_lr_frac + (1 - c.end_lr_frac)
+                       * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+    return jnp.where(step < c.warmup_steps, warm, cos)
+
+
+# -- int8 blockwise moment codec ----------------------------------------------
+
+
+def _q8_encode(x: jnp.ndarray, sqrt_domain: bool = False):
+    """Per-row (last-dim) absmax int8 quantization.
+
+    Non-negative tensors (the second moment) are stored in the sqrt domain,
+    which is the quantity the update actually consumes (1/sqrt(v)) — this
+    halves the dynamic range the 8 bits must cover."""
+    if sqrt_domain:
+        x = jnp.sqrt(jnp.maximum(x, 0.0))
+    absmax = jnp.max(jnp.abs(x), axis=-1, keepdims=True)
+    scale = jnp.maximum(absmax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return {"q": q, "s": scale.astype(jnp.float32)}
+
+
+def _q8_decode(enc, sqrt_domain: bool = False) -> jnp.ndarray:
+    x = enc["q"].astype(jnp.float32) * enc["s"]
+    return jnp.square(x) if sqrt_domain else x
+
+
+def _encode_moment(x: jnp.ndarray, dtype: str, sqrt_domain: bool = False):
+    if dtype == "int8":
+        return _q8_encode(x, sqrt_domain)
+    if dtype == "bfloat16":
+        return x.astype(jnp.bfloat16)
+    return x.astype(jnp.float32)
+
+
+def _decode_moment(enc, dtype: str, sqrt_domain: bool = False) -> jnp.ndarray:
+    if dtype == "int8":
+        return _q8_decode(enc, sqrt_domain)
+    return enc.astype(jnp.float32)
+
+
+# -- factored second moment ----------------------------------------------------
+
+
+def _v_init(p: jnp.ndarray, c: AdamWConfig):
+    if c.factored_v and p.ndim >= 2:
+        return {"r": jnp.zeros(p.shape[:-1], jnp.float32),
+                "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)}
+    return _encode_moment(jnp.zeros_like(p, jnp.float32), c.moment_dtype)
+
+
+def _v_update(v, g2: jnp.ndarray, c: AdamWConfig):
+    """Returns (new_v_store, v_hat_full)."""
+    if c.factored_v and g2.ndim >= 2:
+        r = c.b2 * v["r"] + (1 - c.b2) * g2.mean(-1)
+        col = c.b2 * v["c"] + (1 - c.b2) * g2.mean(-2)
+        denom = jnp.maximum(r.mean(-1, keepdims=True), 1e-30)
+        vhat = (r / denom)[..., None] * col[..., None, :]
+        return {"r": r, "c": col}, vhat
+    vv = c.b2 * _decode_moment(v, c.moment_dtype, sqrt_domain=True) \
+        + (1 - c.b2) * g2
+    return _encode_moment(vv, c.moment_dtype, sqrt_domain=True), vv
+
+
+# -- public API ----------------------------------------------------------------
+
+
+def init(params, c: AdamWConfig) -> Dict[str, Any]:
+    zeros_m = jax.tree.map(
+        lambda p: _encode_moment(jnp.zeros_like(p, jnp.float32),
+                                 c.moment_dtype), params)
+    v = jax.tree.map(lambda p: _v_init(p, c), params)
+    return {"m": zeros_m, "v": v, "step": jnp.zeros((), jnp.int32)}
+
+
+CHUNK_BYTES = 256 * 2 ** 20    # slice dim0 of leaves above this (f32 temps)
+
+
+def _is_big(x) -> bool:
+    return x.ndim >= 3 and x.size * 4 > CHUNK_BYTES
+
+
+def global_norm(tree) -> jnp.ndarray:
+    def sumsq(x):
+        if _is_big(x):   # chunk so the f32 square never materializes fully
+            return jnp.sum(jax.lax.map(
+                lambda s: jnp.sum(jnp.square(s.astype(jnp.float32))), x))
+        return jnp.sum(jnp.square(x.astype(jnp.float32)))
+    return jnp.sqrt(sum(sumsq(x) for x in jax.tree_util.tree_leaves(tree)))
+
+
+def _decay_mask(path) -> bool:
+    """No weight decay on norms, biases, scalars."""
+    names = [getattr(k, "key", getattr(k, "name", "")) for k in path]
+    flat = "/".join(str(n) for n in names)
+    return not any(s in flat for s in ("scale", "bias", "a_log", "d_skip",
+                                       "dt_bias", "ln", "norm", "mask_emb"))
+
+
+def apply(params, grads, state, c: AdamWConfig):
+    """One AdamW step; returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(c, step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, c.clip_norm / jnp.maximum(gnorm, 1e-12))
+
+    b1c = 1 - c.b1 ** step.astype(jnp.float32)
+    b2c = 1 - c.b2 ** step.astype(jnp.float32)
+
+    is_q8 = c.moment_dtype == "int8"
+
+    def upd(path, p, g, m, v):
+        decay = bool(c.weight_decay) and _decay_mask(path)
+
+        def body(p_, g_, m_, v_):
+            g32 = g_.astype(jnp.float32) * clip
+            mm = c.b1 * _decode_moment(m_, c.moment_dtype) + (1 - c.b1) * g32
+            v_new, vhat = _v_update(v_, jnp.square(g32), c)
+            u = (mm / b1c) / (jnp.sqrt(vhat / b2c) + c.eps)
+            if decay:
+                u = u + c.weight_decay * p_.astype(jnp.float32)
+            newp = (p_.astype(jnp.float32) - lr * u).astype(p_.dtype)
+            return newp, _encode_moment(mm, c.moment_dtype), v_new
+
+        # layer-stacked giants (e.g. 58x256-expert weight banks) update in
+        # slices along dim0 so the f32 decode/update temporaries stay small;
+        # the barrier pins the converts inside the loop (otherwise XLA sinks
+        # them through the dynamic-slice and materializes full f32 copies)
+        if _is_big(p):
+            return jax.lax.map(
+                lambda a: body(*jax.lax.optimization_barrier(a)),
+                (p, g, m, v))
+        return body(p, g, m, v)
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat[0]]
+    treedef = flat[1]
+    pl = [x for _, x in flat[0]]
+    gl = treedef.flatten_up_to(grads)
+    ml = treedef.flatten_up_to(state["m"])
+    vl = treedef.flatten_up_to(state["v"])
+    # chain big-leaf updates through optimization barriers so the scheduler
+    # cannot run several leaves' f32 temporaries concurrently (peak memory)
+    out = []
+    prev = None
+    for pt, p, g, m, v in zip(paths, pl, gl, ml, vl):
+        if prev is not None and (_is_big(p) or _is_big(prev)):
+            p, g, prev = jax.lax.optimization_barrier((p, g, prev))
+        res = upd(pt, p, g, m, v)
+        out.append(res)
+        prev = res[0]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+def from_policy(policy, total_steps: int = 10_000,
+                peak_lr: float = 3e-4) -> AdamWConfig:
+    return AdamWConfig(peak_lr=peak_lr, total_steps=total_steps,
+                       moment_dtype=policy.moment_dtype,
+                       factored_v=policy.factored_v)

@@ -1,0 +1,54 @@
+"""Cross-pod gradient compression with error feedback.
+
+At 1000+ nodes the pod-to-pod (DCN) links are the scarce resource; the
+intra-pod ICI all-reduce is cheap by comparison.  The compressed sync
+halves cross-pod bytes (f32 -> bf16) while error feedback keeps the
+optimizer trajectory unbiased: the quantization residual of step t is
+added back into step t+1's gradient before compression, so errors do not
+accumulate (Karimireddy et al., "EF signSGD" analysis applies to any
+deterministic compressor).
+
+Usage inside a step (see launch/steps.make_train_step(grad_compression=..)):
+
+    grads, ef = compress_psum(grads, ef_state, axis="pod")
+
+which lowers to: g + ef -> bf16 -> psum over 'pod' -> f32, ef' = (g+ef) - Q.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def init_state(grads_shapes) -> Any:
+    """Error-feedback residual buffer, one per gradient leaf (f32)."""
+    return jax.tree.map(
+        lambda g: jnp.zeros(g.shape, jnp.bfloat16), grads_shapes)
+
+
+def compress(g: jnp.ndarray, ef: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (bf16 payload, new error-feedback residual)."""
+    corrected = g.astype(jnp.float32) + ef.astype(jnp.float32)
+    q = corrected.astype(jnp.bfloat16)
+    new_ef = (corrected - q.astype(jnp.float32)).astype(jnp.bfloat16)
+    return q, new_ef
+
+
+def compress_tree(grads, ef_state):
+    pairs = jax.tree.map(compress, grads, ef_state)
+    q = jax.tree.map(lambda p: p[0], pairs,
+                     is_leaf=lambda x: isinstance(x, tuple))
+    ef = jax.tree.map(lambda p: p[1], pairs,
+                      is_leaf=lambda x: isinstance(x, tuple))
+    return q, ef
+
+
+def psum_compressed(grads, ef_state, axis: str = "pod"):
+    """Inside shard_map over ``axis``: compressed mean-reduce of grads."""
+    q, ef = compress_tree(grads, ef_state)
+    n = jax.lax.psum(1, axis)
+    summed = jax.tree.map(
+        lambda x: (jax.lax.psum(x, axis).astype(jnp.float32) / n), q)
+    return summed, ef

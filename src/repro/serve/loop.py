@@ -1,0 +1,130 @@
+"""Batched serving loop: slot-based continuous batching.
+
+A fixed decode batch of ``slots``; finished sequences free their slot and
+the next queued request is prefilled into it.  Greedy sampling (argmax);
+the decode step is a single compiled function over the whole slot batch,
+caches donated in place — the production shape of vLLM-style serving,
+scaled to run on this host with reduced configs.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.models import model as lm
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray              # (Tp,) int32
+    max_new: int = 16
+    out_tokens: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    submitted_at: float = 0.0
+    finished_at: float = 0.0
+
+
+class Server:
+    def __init__(self, cfg: ArchConfig, params, slots: int = 4,
+                 cache_len: int = 128, eos_id: Optional[int] = None):
+        self.cfg = cfg
+        self.params = params
+        self.slots = slots
+        self.cache_len = cache_len
+        self.eos_id = eos_id
+        self.active: List[Optional[Request]] = [None] * slots
+        self.pos = np.zeros((slots,), np.int32)
+        self.caches = lm.make_caches(cfg, slots, cache_len)
+        self.queue: List[Request] = []
+        self.completed: List[Request] = []
+
+        self._decode = jax.jit(
+            lambda p, t, ps, c: lm.decode_step(p, t, ps, c, cfg),
+            donate_argnums=(3,))
+        self._prefill_one = jax.jit(
+            lambda p, toks: lm.prefill(p, {"tokens": toks}, cfg,
+                                       cache_len=cache_len))
+
+    def submit(self, req: Request):
+        req.submitted_at = time.time()
+        self.queue.append(req)
+
+    def _admit(self):
+        """Prefill queued requests into free slots."""
+        for i in range(self.slots):
+            if self.active[i] is None and self.queue:
+                req = self.queue.pop(0)
+                logits, fresh = self._prefill_one(
+                    self.params, jnp.asarray(req.prompt[None, :]))
+                # splice slot i's cache from the single-seq prefill cache
+                self.caches = jax.tree.map(
+                    lambda full, one, _i=i: _splice(full, one, _i, self.cfg),
+                    self.caches, fresh)
+                tok = int(jnp.argmax(logits[0]))
+                req.out_tokens.append(tok)
+                self.active[i] = req
+                self.pos[i] = len(req.prompt)
+
+    def _retire(self, i: int):
+        req = self.active[i]
+        req.done = True
+        req.finished_at = time.time()
+        self.completed.append(req)
+        self.active[i] = None
+
+    def step(self):
+        """One serving iteration: admit, batched decode, retire."""
+        self._admit()
+        live = [i for i in range(self.slots) if self.active[i] is not None]
+        if not live:
+            return False
+        toks = np.zeros((self.slots, 1), np.int32)
+        for i in live:
+            toks[i, 0] = self.active[i].out_tokens[-1]
+        logits, self.caches = self._decode(
+            self.params, jnp.asarray(toks),
+            jnp.asarray(self.pos), self.caches)
+        nxt = np.asarray(jnp.argmax(logits, -1))
+        for i in live:
+            req = self.active[i]
+            req.out_tokens.append(int(nxt[i]))
+            self.pos[i] += 1
+            hit_eos = self.eos_id is not None and int(nxt[i]) == self.eos_id
+            if (len(req.out_tokens) >= req.max_new or hit_eos
+                    or int(self.pos[i]) >= self.cache_len - 1):
+                self._retire(i)
+        return True
+
+    def run_until_drained(self, max_iters: int = 10_000):
+        it = 0
+        while (self.queue or any(a is not None for a in self.active)) \
+                and it < max_iters:
+            self.step()
+            it += 1
+        return self.completed
+
+
+def _splice(full, one, slot: int, cfg: ArchConfig):
+    """Write the single-sequence prefill cache ``one`` into batch slot
+    ``slot`` of the server cache ``full``.  Cache layouts put batch at
+    axis 1 (layer-stacked) for every family."""
+    # trim/pad the sequence axis if the prefill cache is longer/shorter
+    if one.shape != full.shape:
+        pads = []
+        slc = []
+        for a, (fo, oo) in enumerate(zip(full.shape, one.shape)):
+            if a == 1:      # batch axis
+                pads.append((0, 0))
+                slc.append(slice(0, oo))
+            else:
+                pads.append((0, max(0, fo - oo)))
+                slc.append(slice(0, min(fo, oo)))
+        one = jnp.pad(one[tuple(slc)], pads)
+    return jax.lax.dynamic_update_index_in_dim(full, one[:, :1], slot, 1)

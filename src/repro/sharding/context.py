@@ -1,0 +1,93 @@
+"""Logical-axis sharding context.
+
+Model code annotates tensors with *logical* axes ('batch', 'model', 'expert',
+None); the active mesh (set by the launcher) decides what they resolve to:
+
+  'batch'  -> ('pod', 'data') on the multi-pod mesh, ('data',) single-pod
+  'model'  -> 'model'   (TP/EP axis)
+  'fsdp'   -> 'data'    (parameter/optimizer-state sharding axis)
+
+With no mesh set (CPU smoke tests) every constraint is a no-op, so the same
+model code runs anywhere.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_state = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    return getattr(_state, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh(mesh: Optional[Mesh]):
+    prev = current_mesh()
+    _state.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _state.mesh = prev
+
+
+def resolve_axis(logical, mesh: Mesh):
+    """Map a logical axis name to mesh axis name(s)."""
+    names = mesh.axis_names
+    if logical is None:
+        return None
+    if logical == "batch":
+        return ("pod", "data") if "pod" in names else "data"
+    if logical == "batch_heads":
+        # a flattened (batch*heads) dim: batch-major -> DP axes, heads ->
+        # 'model'; the merged dim shards over all of them
+        base = ("pod", "data") if "pod" in names else ("data",)
+        return base + ("model",) if "model" in names else base
+    if logical == "fsdp":
+        return "data"
+    if logical in names:
+        return logical
+    return None
+
+
+def spec(*logical) -> P:
+    """Resolve logical axes against the current mesh into a PartitionSpec."""
+    mesh = current_mesh()
+    if mesh is None:
+        return P()
+    return P(*(resolve_axis(a, mesh) for a in logical))
+
+
+def constrain(x, *logical):
+    """with_sharding_constraint by logical axes; no-op without a mesh.
+
+    Axes whose size does not divide the mesh axis are dropped (replicated)
+    — e.g. 8 KV heads on a 16-way model axis.
+    """
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    resolved = []
+    for dim, a in enumerate(logical):
+        r = resolve_axis(a, mesh)
+        if r is not None:
+            ax_size = 1
+            for n in (r if isinstance(r, tuple) else (r,)):
+                ax_size *= mesh.shape[n]
+            if x.shape[dim] % ax_size != 0:
+                r = None
+        resolved.append(r)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*resolved)))
+
+
+def named_sharding(*logical) -> Optional[NamedSharding]:
+    mesh = current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, spec(*logical))

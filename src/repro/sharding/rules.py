@@ -1,0 +1,177 @@
+"""PartitionSpec rules: parameter/optimizer/batch/cache shardings per arch.
+
+The two tensor-parallel dataflows (DESIGN.md §3):
+
+* ``allreduce`` (Megatron): up-projections column-sharded on 'model',
+  down-projections row-sharded => partial sums all-reduced.
+* ``allgather`` (the paper's reduction-free outer-product dataflow): every
+  weight sharded on its *output* dim; inputs are all-gathered just-in-time
+  and partial sums never cross the 'model' axis.
+
+FSDP ('data'-axis parameter + optimizer-state sharding) stacks on top for
+the large archs (policy.fsdp).
+"""
+from __future__ import annotations
+
+import math
+from typing import Any, Dict, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ArchConfig
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def _fits(shape, spec, mesh: Mesh):
+    """Drop axes that don't divide the dim (e.g. 8 KV heads on model=16)."""
+    out = []
+    for i, ax in enumerate(spec):
+        if ax is not None and (i >= len(shape)
+                               or shape[i] % _axis_size(mesh, ax) != 0):
+            ax = None
+        out.append(ax)
+    return P(*out)
+
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "name", k)))
+                    for k in path)
+
+
+def _base_rule(pstr: str, cfg: ArchConfig) -> Tuple:
+    """Logical spec for the *unstacked* parameter (innermost dims)."""
+    fsdp = "data" if cfg.policy.fsdp else None
+    ag = cfg.policy.tp_mode == "allgather"
+    ep = cfg.moe is not None and cfg.moe.sharding == "ep"
+
+    if "embed/table" in pstr:
+        return ("model", fsdp)
+    if "head/w" in pstr or "mtp_proj/w" in pstr:
+        return (fsdp, "model")
+    if "experts/wi" in pstr or "experts/wg" in pstr:
+        return ("model", fsdp, None) if ep else (None, fsdp, "model")
+    if "experts/wo" in pstr:
+        if ep:
+            return ("model", None, fsdp)
+        return (None, fsdp, "model") if ag else (None, "model", fsdp)
+    if "router/w" in pstr:
+        return (None, None)
+    if "lora_a" in pstr:
+        return (fsdp, None)          # (2d, r) under a stacked groups dim
+    if "lora_b" in pstr:
+        return (None, None)
+    if "conv_w" in pstr:
+        return (None, "model")
+    # attention / mla / mlp / mamba two-dim weights
+    if any(s in pstr for s in ("wq/w", "wk/w", "wv/w", "wi/w", "wg/w",
+                               "wuq/w", "wuk/w", "wuv/w", "wdkv/w",
+                               "wdq/w", "in_proj/w")):
+        return (fsdp, "model")
+    if "wkr/w" in pstr:
+        return (fsdp, None)
+    if any(s in pstr for s in ("wo/w", "out_proj/w")):
+        return (fsdp, "model") if ag else ("model", fsdp)
+    return None                       # replicate (norms, scalars, biases)
+
+
+def _spec_for(pstr: str, ndim: int, cfg: ArchConfig) -> Tuple:
+    base = _base_rule(pstr, cfg)
+    if base is None or ndim < len(base):
+        return (None,) * ndim
+    return (None,) * (ndim - len(base)) + tuple(base)
+
+
+def param_pspecs(cfg: ArchConfig, params_shapes, mesh: Mesh):
+    """PartitionSpec tree matching the params pytree."""
+
+    def one(path, leaf):
+        return _fits(leaf.shape, _spec_for(_path_str(path), leaf.ndim, cfg),
+                     mesh)
+
+    return jax.tree_util.tree_map_with_path(one, params_shapes)
+
+
+def opt_pspecs(cfg: ArchConfig, opt_shapes, mesh: Mesh):
+    """Specs for the optimizer state (mirrors params with m/v wrappers)."""
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        if pstr.endswith("step"):
+            return P()
+        # strip the m/v prefix and the codec suffix
+        suffix = pstr.rsplit("/", 1)[-1]
+        core = pstr.split("/", 1)[1] if "/" in pstr else pstr
+        nd = leaf.ndim
+        if suffix == "s":      # int8 scale: param spec minus last axis
+            spec = _spec_for(core.rsplit("/", 1)[0], nd, cfg)
+            spec = spec[:-1] + (None,)
+        elif suffix == "r":    # factored row stat: param ndim = nd+1
+            spec = _spec_for(core.rsplit("/", 1)[0], nd + 1, cfg)[:-1]
+        elif suffix == "c":    # factored col stat
+            full = _spec_for(core.rsplit("/", 1)[0], nd + 1, cfg)
+            spec = full[:-2] + full[-1:]
+        elif suffix == "q":
+            spec = _spec_for(core.rsplit("/", 1)[0], nd, cfg)
+        else:
+            spec = _spec_for(core, nd, cfg)
+        return _fits(leaf.shape, spec, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, opt_shapes)
+
+
+def batch_pspecs(cfg: ArchConfig, batch_shapes, mesh: Mesh):
+    """Inputs: dim0 = batch, sharded over ('pod','data') when divisible."""
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def one(path, leaf):
+        spec = (baxes,) + (None,) * (leaf.ndim - 1)
+        return _fits(leaf.shape, spec, mesh)
+
+    return jax.tree_util.tree_map_with_path(one, batch_shapes)
+
+
+def cache_pspecs(cfg: ArchConfig, cache_shapes, mesh: Mesh):
+    """Decode caches: batch over DP axes; heads (or head_dim / latent /
+    state channels) over 'model'."""
+    baxes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+
+    def one(path, leaf):
+        pstr = _path_str(path)
+        nd = leaf.ndim
+        if pstr.endswith("pos"):
+            return _fits(leaf.shape, (None, baxes, None)[:nd], mesh)
+        if "/k" in pstr or "/v" in pstr or pstr.endswith("k") or pstr.endswith("v"):
+            # (L, B, T, H, hd): heads if divisible else head_dim
+            spec = [None] * nd
+            spec[1] = baxes
+            h_ax = nd - 2
+            if leaf.shape[h_ax] % _axis_size(mesh, "model") == 0:
+                spec[h_ax] = "model"
+            else:
+                spec[nd - 1] = "model"
+            return _fits(leaf.shape, tuple(spec), mesh)
+        if "ckv" in pstr:
+            return _fits(leaf.shape, (None, baxes, None, "model"), mesh)
+        if "kr" in pstr:
+            return _fits(leaf.shape, (None, baxes, None, None), mesh)
+        if "conv" in pstr:
+            return _fits(leaf.shape, (None, baxes, None, "model"), mesh)
+        if "ssm" in pstr:
+            return _fits(leaf.shape, (None, baxes, "model", None, None), mesh)
+        spec = (None, baxes) + (None,) * (nd - 2)
+        return _fits(leaf.shape, spec[:nd], mesh)
+
+    return jax.tree_util.tree_map_with_path(one, cache_shapes)
+
+
+def to_named(tree, mesh: Mesh):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,137 @@
+"""Fault-tolerant training loop.
+
+Production posture (scaled down to run anywhere, incl. this CPU host):
+
+* checkpoint/restart: periodic async checkpoints + resume autodiscovery;
+  the data-pipeline state (a step counter) rides in checkpoint meta, so a
+  restart resumes the exact batch stream.
+* preemption: SIGTERM/SIGINT trigger a final blocking checkpoint before
+  exit (the standard TPU-maintenance handshake).
+* straggler watchdog: per-step wall time EWMA; steps slower than
+  ``straggler_factor`` x EWMA are counted and logged — at fleet scale this
+  feeds the scheduler's hot-spare replacement policy (here: observability).
+* metrics: JSONL per step.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import signal
+import time
+from pathlib import Path
+from typing import Callable, Dict, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint.ckpt import CheckpointManager
+from repro.data.pipeline import PipelineState
+
+
+@dataclasses.dataclass
+class LoopConfig:
+    total_steps: int = 100
+    ckpt_every: int = 50
+    log_every: int = 10
+    out_dir: str = "runs/default"
+    keep_ckpts: int = 3
+    straggler_factor: float = 3.0
+
+
+class TrainLoop:
+    """Drives (params, opt_state) through ``step_fn`` with fault tolerance.
+
+    ``step_fn(params, opt_state, batch) -> (params, opt_state, metrics)``
+    is any compiled step (launch/steps.make_train_step or a plain jit for
+    CPU-scale runs).
+    """
+
+    def __init__(self, cfg: LoopConfig, step_fn: Callable, params, opt_state,
+                 pipeline, shardings=None):
+        self.cfg = cfg
+        self.step_fn = step_fn
+        self.params = params
+        self.opt_state = opt_state
+        self.pipeline = pipeline
+        self.pstate = PipelineState()
+        self.out = Path(cfg.out_dir)
+        self.out.mkdir(parents=True, exist_ok=True)
+        self.ckpt = CheckpointManager(self.out / "ckpt", keep=cfg.keep_ckpts)
+        self.metrics_file = self.out / "metrics.jsonl"
+        self.step = 0
+        self.straggler_steps = 0
+        self._ewma: Optional[float] = None
+        self._preempted = False
+        self._shardings = shardings
+
+    # -- fault-tolerance hooks -------------------------------------------------
+
+    def _install_signal_handlers(self):
+        def handler(signum, frame):
+            self._preempted = True
+        for sig in (signal.SIGTERM, signal.SIGINT):
+            signal.signal(sig, handler)
+
+    def try_resume(self) -> bool:
+        latest = self.ckpt.latest_step()
+        if latest is None:
+            return False
+        (self.params, self.opt_state), meta = self.ckpt.restore(
+            (self.params, self.opt_state))
+        if self._shardings is not None:
+            self.params, self.opt_state = jax.device_put(
+                (self.params, self.opt_state), self._shardings)
+        self.step = meta["step"]
+        self.pstate = PipelineState.from_dict(meta["pipeline"])
+        return True
+
+    def _save(self, blocking=False):
+        self.ckpt.save(self.step, (self.params, self.opt_state),
+                       meta={"pipeline": self.pstate.to_dict()},
+                       blocking=blocking)
+
+    # -- main ------------------------------------------------------------------
+
+    def run(self) -> Dict:
+        self._install_signal_handlers()
+        resumed = self.try_resume()
+        log = self.metrics_file.open("a")
+        last_metrics: Dict = {}
+        while self.step < self.cfg.total_steps:
+            if self._preempted:
+                self._save(blocking=True)
+                log.close()
+                return {"status": "preempted", "step": self.step,
+                        **last_metrics}
+            batch = self.pipeline.batch(self.pstate.step)
+            t0 = time.time()
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, batch)
+            jax.block_until_ready(metrics["loss"])
+            dt = time.time() - t0
+            self.pstate.step += 1
+            self.step += 1
+
+            # straggler watchdog
+            if self._ewma is None:
+                self._ewma = dt
+            else:
+                if dt > self.cfg.straggler_factor * self._ewma:
+                    self.straggler_steps += 1
+                self._ewma = 0.9 * self._ewma + 0.1 * dt
+
+            last_metrics = {k: float(np.asarray(v)) for k, v in
+                            metrics.items()}
+            if self.step % self.cfg.log_every == 0 or \
+                    self.step == self.cfg.total_steps:
+                rec = dict(step=self.step, sec_per_step=round(dt, 4),
+                           stragglers=self.straggler_steps,
+                           resumed=resumed, **last_metrics)
+                log.write(json.dumps(rec) + "\n")
+                log.flush()
+            if self.step % self.cfg.ckpt_every == 0:
+                self._save()
+        self._save(blocking=True)
+        log.close()
+        return {"status": "done", "step": self.step,
+                "stragglers": self.straggler_steps, **last_metrics}

@@ -1,0 +1,307 @@
+"""Core layer tests: strict interpreter vs oracle vs fast engine (bit-exact),
+Table-1 mapping, CSRs, pointer table, cost-model calibration vs the paper."""
+import numpy as np
+import pytest
+
+from repro.core import cost as cost_mod
+from repro.core.engine import AMEEngine, pim_gemm, pim_gemv
+from repro.core.isa import (
+    AMEOp,
+    PIMOpcode,
+    ROWNUM,
+    UnsupportedOnPIM,
+    pim_mapping,
+)
+from repro.core.pep import (
+    ChannelMemoryMap,
+    banks_to_tile,
+    ew_invocations,
+    init_channel,
+    mac_invocations,
+    run_ew_strict,
+    run_mac_strict,
+    scalars_to_bank0,
+    tile_to_banks,
+)
+
+F16 = np.float16
+RNG = np.random.default_rng(0)
+
+
+def rand_tile(m, c, scale=1.0):
+    return (RNG.standard_normal((m, c)) * scale).astype(F16)
+
+
+# ---------------------------------------------------------------------------
+# order-exact FP16 oracles (round after multiply, round after add)
+# ---------------------------------------------------------------------------
+
+
+def oracle_gemm_f16(a, b):
+    """Ascending-k outer products; each MAC is a fused multiply-accumulate
+    (single rounding at the FP16 register writeback)."""
+    m, k = a.shape
+    _, n = b.shape
+    acc = np.zeros((m, n), F16)
+    for kk in range(k):
+        acc = (acc.astype(np.float32)
+               + a[:, kk:kk + 1].astype(np.float32)
+               @ b[kk:kk + 1, :].astype(np.float32)).astype(F16)
+    return acc
+
+
+def oracle_sub_f16(a, b):
+    return (a + (b * F16(-1.0)).astype(F16)).astype(F16)
+
+
+# ---------------------------------------------------------------------------
+# strict interpreter (Listing 1) vs oracles
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind,m,c", [
+    ("add", 128, 16), ("add", 37, 24), ("mul", 128, 8), ("mul", 16, 40),
+    ("sub", 128, 16), ("sub", 64, 8),
+])
+def test_strict_elementwise(kind, m, c):
+    ch, mm = init_channel(nblocks=8192, b_region_blocks=64, tile_cols=64)
+    a, b = rand_tile(m, c), rand_tile(m, c)
+    tile_to_banks(ch.state.even_banks, mm.tiles[0], a)
+    tile_to_banks(ch.state.even_banks, mm.tiles[1], b)
+    cmds = run_ew_strict(ch, mm, kind, mm.tiles[0], mm.tiles[1], mm.accs[0], c)
+    got = banks_to_tile(ch.state.odd_banks, mm.accs[0], m, c)
+    ref = {"add": lambda: (a + b).astype(F16),
+           "mul": lambda: (a * b).astype(F16),
+           "sub": lambda: oracle_sub_f16(a, b)}[kind]()
+    np.testing.assert_array_equal(got, ref)
+    # command count matches the Listing-1 instruction mix
+    passes = sum(p for _, p in ew_invocations(c))
+    per = {"add": 24, "mul": 24, "sub": 32}[kind]
+    extra = 8 * len(ew_invocations(c)) if kind == "sub" else 0
+    assert cmds == passes * per + extra
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 8, 4), (128, 16, 2), (64, 24, 3),
+                                   (128, 8, 1), (16, 8, 8)])
+def test_strict_mac_outer_product(m, k, n):
+    ch, mm = init_channel(nblocks=8192, b_region_blocks=64, tile_cols=64)
+    a = rand_tile(m, k, 0.5)
+    b = rand_tile(k, n, 0.5)
+    tile_to_banks(ch.state.even_banks, mm.tiles[0], a)
+    scalars_to_bank0(ch.state.even_banks, mm.b_scalars, b.T)  # K-major per col
+    tile_to_banks(ch.state.odd_banks, mm.accs[0], np.zeros((m, n), F16))
+    cmds = run_mac_strict(ch, mm, mm.tiles[0], mm.accs[0], k, n)
+    got = banks_to_tile(ch.state.odd_banks, mm.accs[0], m, n)
+    np.testing.assert_array_equal(got, oracle_gemm_f16(a, b))
+    passes = sum(i.passes for i in mac_invocations(k, n))
+    assert cmds == passes * 26  # 1 fill + 8 srf + 8 bcast-add + 8 mac + 1 mov
+
+
+def test_strict_mac_accumulates_into_existing_acc():
+    ch, mm = init_channel(nblocks=4096, b_region_blocks=64, tile_cols=64)
+    a, b = rand_tile(128, 8), rand_tile(8, 4)
+    acc0 = rand_tile(128, 4)
+    tile_to_banks(ch.state.even_banks, mm.tiles[0], a)
+    scalars_to_bank0(ch.state.even_banks, mm.b_scalars, b.T)
+    tile_to_banks(ch.state.odd_banks, mm.accs[0], acc0)
+    run_mac_strict(ch, mm, mm.tiles[0], mm.accs[0], 8, 4)
+    got = banks_to_tile(ch.state.odd_banks, mm.accs[0], 128, 4)
+    ref = acc0.copy()
+    for kk in range(8):
+        ref = (ref.astype(np.float32)
+               + a[:, kk:kk + 1].astype(np.float32)
+               @ b[kk:kk + 1, :].astype(np.float32)).astype(F16)
+    np.testing.assert_array_equal(got, ref)
+
+
+# ---------------------------------------------------------------------------
+# fast engine is bit-exact with the strict interpreter
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 16, 4), (96, 8, 8), (128, 40, 2)])
+def test_fast_engine_bitexact_vs_strict(m, k, n):
+    a = rand_tile(m, k, 0.5)
+    b = rand_tile(k, n, 0.5)
+    # strict
+    ch, mm = init_channel(nblocks=4096, b_region_blocks=64, tile_cols=64)
+    tile_to_banks(ch.state.even_banks, mm.tiles[0], a)
+    scalars_to_bank0(ch.state.even_banks, mm.b_scalars, b.T)
+    tile_to_banks(ch.state.odd_banks, mm.accs[0], np.zeros((m, n), F16))
+    run_mac_strict(ch, mm, mm.tiles[0], mm.accs[0], k, n)
+    strict = banks_to_tile(ch.state.odd_banks, mm.accs[0], m, n)
+    # fast
+    eng = AMEEngine()
+    eng.msettilem(m), eng.msettilek(k), eng.msettilen(n)
+    eng.mld(0, a)
+    eng.mld(1, b)
+    eng.mfmacc(0, 0, 1)
+    fast = np.asarray(eng.mst(0))
+    np.testing.assert_array_equal(strict, fast)
+
+
+@pytest.mark.parametrize("kind", ["add", "mul", "sub"])
+def test_fast_engine_elementwise_bitexact_vs_strict(kind):
+    m, c = 77, 19
+    a, b = rand_tile(m, c), rand_tile(m, c)
+    ch, mm = init_channel(nblocks=4096, b_region_blocks=64, tile_cols=64)
+    tile_to_banks(ch.state.even_banks, mm.tiles[0], a)
+    tile_to_banks(ch.state.even_banks, mm.tiles[1], b)
+    run_ew_strict(ch, mm, kind, mm.tiles[0], mm.tiles[1], mm.accs[0], c)
+    strict = banks_to_tile(ch.state.odd_banks, mm.accs[0], m, c)
+    eng = AMEEngine()
+    eng.msettilem(m), eng.msettilek(c)
+    eng.mld(0, a)
+    eng.mld(1, b)
+    getattr(eng, f"mf{kind}")(0, 0, 1)
+    np.testing.assert_array_equal(strict, np.asarray(eng.mst(0)))
+
+
+# ---------------------------------------------------------------------------
+# AME semantics: Table-1 mapping, CSRs, pointer table
+# ---------------------------------------------------------------------------
+
+
+def test_table1_unsupported_ops_raise():
+    eng = AMEEngine()
+    eng.mld(0, rand_tile(8, 8))
+    eng.mld(1, rand_tile(8, 8))
+    with pytest.raises(UnsupportedOnPIM):
+        eng.mfmax(0, 0, 1)
+    with pytest.raises(UnsupportedOnPIM):
+        eng.mfmin(0, 0, 1)
+    with pytest.raises(UnsupportedOnPIM):
+        eng.mfmacc(0, 0, 1, widen=True)
+    with pytest.raises(UnsupportedOnPIM):
+        pim_mapping(AMEOp.MFMACC_WIDEN)
+
+
+def test_table1_supported_mappings():
+    assert pim_mapping(AMEOp.MFADD_MM) == (PIMOpcode.ADD,)
+    assert pim_mapping(AMEOp.MFSUB_MM) == (PIMOpcode.MUL, PIMOpcode.ADD)
+    assert pim_mapping(AMEOp.MFMUL_MV) == (PIMOpcode.MUL,)
+    assert pim_mapping(AMEOp.MFMACC) == (PIMOpcode.MAC,)
+
+
+def test_csr_clamping():
+    eng = AMEEngine()
+    assert eng.msettilem(1000) == ROWNUM
+    assert eng.msettilek(10 ** 6) == 4096
+    assert eng.msettilen(0) == 1
+
+
+def test_pointer_table_transposed_load_and_slide():
+    eng = AMEEngine()
+    a = rand_tile(16, 32)
+    eng.mld_t(0, a)                       # zero-copy transpose
+    assert eng.tr[0].shape == (32, 16)
+    np.testing.assert_array_equal(np.asarray(eng.tr[0].resolve()), a.T)
+    eng.mslide(0, rows=2, cols=1)
+    np.testing.assert_array_equal(np.asarray(eng.tr[0].resolve()), a.T[2:, 1:])
+    eng.mmov(1, 0)
+    assert eng.tr[1].shape == eng.tr[0].shape
+
+
+def test_mv_broadcast_form():
+    eng = AMEEngine()
+    a = rand_tile(32, 16)
+    v = rand_tile(1, 16)[0]
+    eng.msettilem(32), eng.msettilek(16)
+    eng.mld(0, a)
+    eng.mfadd(0, 0, v)                    # .mv.i form
+    ref = (a + np.broadcast_to(v, a.shape)).astype(F16)
+    np.testing.assert_array_equal(np.asarray(eng.mst(0)), ref)
+
+
+# ---------------------------------------------------------------------------
+# cost model calibration vs the paper (§4, Figs 8/9, Table 3)
+# ---------------------------------------------------------------------------
+
+
+def test_paper_headline_numbers():
+    s = cost_mod.summary()
+    # 59.4 FLOP/cycle saturated; 14.9 GFLOP/s at 250 MHz (paper abstract)
+    assert abs(s["mfmacc_flop_per_cycle_saturated"] - 59.4) < 0.1
+    assert abs(s["mfmacc_flop_per_cycle_saturated"] * 250e6 / 1e9 - 14.9) < 0.1
+    # 256 MAC-PEP invocations at max tile (paper §4.2)
+    assert s["mfmacc_launches_maxtile"] == 256
+    # setup <1% of runtime at max tile (paper §4.2)
+    assert s["setup_share_maxtile"] < 0.01
+    # bounded by <= half the 128 FLOP/cycle theoretical peak (paper §4.2)
+    assert s["mfmacc_flop_per_cycle_saturated"] <= 64.0
+
+
+def test_mac_invocation_decomposition():
+    from repro.core.pep import mac_pass_coords
+    # paper: "supports both 128x2048x1 GEMV and 128x8x256 GEMM in a single
+    # execution" — both are exactly one PEP launch
+    assert len(mac_invocations(2048, 1)) == 1
+    assert len(mac_invocations(8, 256)) == 1
+    assert len(mac_invocations(4096, 128)) == 256
+    # the global pass schedule covers every (j, k0) exactly once, j-outer /
+    # k-inner (ascending k per column = hardware accumulation order)
+    k, n = 48, 3
+    invs = mac_invocations(k, n)
+    coords = [mac_pass_coords(i.start + t, k)
+              for i in invs for t in range(i.passes)]
+    expect = [(j, 8 * c) for j in range(n) for c in range(6)]
+    assert coords == expect
+
+
+def test_elementwise_double_invocation_at_max_tile():
+    # paper §4.2: mfadd/mfmul/mfsub require a double PEP invocation at 128x4096
+    rep = cost_mod.elementwise_cost("add", 128, 4096)
+    assert rep.launches == 2
+    rep = cost_mod.mfmacc_cost(128, 4096, 128)
+    assert rep.launches == 256
+
+
+def test_fig9_scaling_monotone_saturation():
+    sizes = [8, 32, 128, 512, 1024, 2048]
+    effs = [cost_mod.mfmacc_cost(128, s, 1).flop_per_cycle for s in sizes]
+    assert all(b > a for a, b in zip(effs, effs[1:]))  # monotone rising
+    assert effs[-1] > 0.95 * cost_mod.saturated_flop_per_cycle("mac")
+    # small tiles are setup-dominated (well under half the plateau)
+    assert effs[0] < 0.5 * effs[-1]
+
+
+def test_sub_slower_than_add():
+    add = cost_mod.elementwise_cost("add", 128, 2048)
+    sub = cost_mod.elementwise_cost("sub", 128, 2048)
+    assert sub.cycles > add.cycles
+    assert sub.flop_per_cycle < add.flop_per_cycle
+
+
+# ---------------------------------------------------------------------------
+# end-to-end PIM GEMM/GEMV
+# ---------------------------------------------------------------------------
+
+
+def test_pim_gemm_against_fp32(tolerant=True):
+    a = rand_tile(256, 160, 0.2)
+    b = rand_tile(160, 192, 0.2)
+    out, eng = pim_gemm(a, b)
+    ref = a.astype(np.float32) @ b.astype(np.float32)
+    np.testing.assert_allclose(np.asarray(out, np.float32), ref,
+                               atol=0.25, rtol=0.05)
+    assert eng.total_flops == 2 * 256 * 160 * 192
+    assert eng.total_cycles > 0
+
+
+def test_pim_gemv_matches_gemm_column():
+    a = rand_tile(128, 64, 0.3)
+    x = rand_tile(64, 1, 0.3)[:, 0]
+    y, eng = pim_gemv(a, x)
+    ref = oracle_gemm_f16(a, x[:, None])[:, 0]
+    np.testing.assert_array_equal(np.asarray(y), ref)
+
+
+def test_multi_channel_scaling():
+    rep1 = cost_mod.mfmacc_cost(128, 2048, 1)
+    eng = AMEEngine(channels=16)
+    eng.mld(0, rand_tile(128, 64))
+    eng.mld(1, rand_tile(64, 4))
+    eng.msettilek(64), eng.msettilen(4)
+    r = eng.mfmacc(0, 0, 1)
+    assert r.flops == 16 * 2 * 128 * 64 * 4   # FLOPs scale, cycles don't
+    assert r.cycles == cost_mod.mfmacc_cost(128, 64, 4).cycles

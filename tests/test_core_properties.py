@@ -1,0 +1,98 @@
+"""Property-based tests (hypothesis) for core AME-PIM invariants."""
+import math
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cost as cost_mod
+from repro.core.engine import AMEEngine
+from repro.core.isa import AAM_BLOCKS, JUMP_MAX_ITERS
+from repro.core.pep import ew_invocations, mac_invocations, mac_pass_coords
+
+F16 = np.float16
+
+dims = st.integers(min_value=1, max_value=512)
+small = st.integers(min_value=1, max_value=48)
+
+
+@given(k=dims, n=dims)
+@settings(max_examples=60, deadline=None)
+def test_mac_schedule_is_a_partition(k, n):
+    """Every (column, k-chunk) is visited exactly once, within pass bounds."""
+    invs = mac_invocations(k, n)
+    assert all(1 <= i.passes <= JUMP_MAX_ITERS for i in invs)
+    total = sum(i.passes for i in invs)
+    assert total == math.ceil(k / AAM_BLOCKS) * n
+    # starts are contiguous
+    assert [i.start for i in invs] == list(
+        np.cumsum([0] + [i.passes for i in invs[:-1]]))
+    # coords bijective over the grid
+    seen = set()
+    for i in invs:
+        for t in range(i.passes):
+            c = mac_pass_coords(i.start + t, k)
+            assert c not in seen
+            seen.add(c)
+    assert len(seen) == total
+
+
+@given(c=dims)
+@settings(max_examples=60, deadline=None)
+def test_ew_invocations_cover_columns(c):
+    invs = ew_invocations(c)
+    cols = []
+    for col0, passes in invs:
+        assert 1 <= passes <= JUMP_MAX_ITERS
+        cols.extend(range(col0, col0 + passes * AAM_BLOCKS, AAM_BLOCKS))
+    # contiguous 8-column windows covering at least c columns, no overlap
+    assert cols == sorted(set(cols))
+    assert cols[0] == 0 and cols[-1] + AAM_BLOCKS >= c
+
+
+@given(m=st.integers(2, 128), k=small, n=st.integers(1, 8),
+       seed=st.integers(0, 2 ** 16))
+@settings(max_examples=25, deadline=None)
+def test_mfmacc_linearity_in_blocks(m, k, n, seed):
+    """Splitting K across two mfmacc calls == one call (in-memory
+    accumulation is exact chunk-wise: same ascending-k order)."""
+    rng = np.random.default_rng(seed)
+    a = (rng.standard_normal((m, k)) * 0.25).astype(F16)
+    b = (rng.standard_normal((k, n)) * 0.25).astype(F16)
+    e1 = AMEEngine()
+    e1.msettilem(m), e1.msettilek(k), e1.msettilen(n)
+    e1.mld(0, a), e1.mld(1, b)
+    e1.mfmacc(0, 0, 1)
+    one = np.asarray(e1.mst(0))
+
+    ks = max(1, (k // 2 // AAM_BLOCKS) * AAM_BLOCKS) if k > AAM_BLOCKS else k
+    e2 = AMEEngine()
+    e2.msettilem(m), e2.msettilen(n)
+    for lo, hi in ((0, ks), (ks, k)):
+        if hi <= lo:
+            continue
+        e2.msettilek(hi - lo)
+        e2.mld(0, a[:, lo:hi]), e2.mld(1, b[lo:hi])
+        e2.mfmacc(0, 0, 1)
+    np.testing.assert_array_equal(one, np.asarray(e2.mst(0)))
+
+
+@given(m=st.integers(1, 128), k=dims, n=dims)
+@settings(max_examples=60, deadline=None)
+def test_cost_monotone_and_positive(m, k, n):
+    r = cost_mod.mfmacc_cost(m, k, n)
+    assert r.cycles > r.commands > 0
+    assert r.flops == 2 * m * k * n
+    assert r.flop_per_cycle <= cost_mod.saturated_flop_per_cycle("mac") + 1e-9
+    # ISA model always beats the bus model
+    assert r.flop_per_cycle_isa > r.flop_per_cycle
+
+
+@given(kind=st.sampled_from(["add", "mul", "sub"]),
+       m=st.integers(1, 128), c=dims)
+@settings(max_examples=60, deadline=None)
+def test_elementwise_cost_lane_waste(kind, m, c):
+    """Rows < 128 waste SIMD lanes: cycles fixed by c, flops scale with m."""
+    r = cost_mod.elementwise_cost(kind, m, c)
+    full = cost_mod.elementwise_cost(kind, 128, c)
+    assert r.cycles == full.cycles
+    assert r.flops == m * c

@@ -1,0 +1,102 @@
+"""Unit tests for the trip-count-aware HLO static analyzer."""
+import textwrap
+
+from repro.launch import hloanalysis as ha
+
+HLO = textwrap.dedent("""\
+    HloModule jit_step
+
+    %add_comp (x: f32[], y: f32[]) -> f32[] {
+      %x = f32[] parameter(0)
+      %y = f32[] parameter(1)
+      ROOT %a = f32[] add(%x, %y)
+    }
+
+    %body (arg: (s32[], f32[8,16])) -> (s32[], f32[8,16]) {
+      %arg = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %w = f32[8,16]{1,0} get-tuple-element(%arg), index=1
+      %lhs = f32[8,4]{1,0} constant({...})
+      %rhs = f32[4,16]{1,0} constant({...})
+      %d = f32[8,16]{1,0} dot(%lhs, %rhs), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,16]{1,0} all-reduce(%d), replica_groups=[16,16]<=[256], to_apply=%add_comp
+      %s = f32[8,16]{1,0} add(%ar, %w)
+      ROOT %t = (s32[], f32[8,16]) tuple(%i, %s)
+    }
+
+    %cond (arg: (s32[], f32[8,16])) -> pred[] {
+      %arg = (s32[], f32[8,16]) parameter(0)
+      %i = s32[] get-tuple-element(%arg), index=0
+      %c = s32[] constant(7)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (p0: f32[8,16]) -> f32[8,16] {
+      %p0 = f32[8,16]{1,0} parameter(0)
+      %i0 = s32[] constant(0)
+      %tup = (s32[], f32[8,16]) tuple(%i0, %p0)
+      %w = (s32[], f32[8,16]) while(%tup), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"7"}}
+      %out = f32[8,16]{1,0} get-tuple-element(%w), index=1
+      %ag = f32[8,64]{1,0} all-gather(%out), replica_groups=[64,4]<=[256], dimensions={1}
+      %sl = f32[8,16]{1,0} slice(%ag), slice={[0:8],[0:16]}
+      ROOT %r = f32[8,16]{1,0} add(%sl, %out)
+    }
+    """)
+
+
+def test_parse_and_multipliers():
+    comps = ha.parse_hlo(HLO)
+    assert "__entry__" in comps and comps["__entry__"].name.startswith("main")
+    mult = ha._multipliers(comps)
+    assert mult["body"] == 7.0          # known_trip_count
+    assert mult["cond"] == 7.0
+    assert mult[comps["__entry__"].name] == 1.0
+
+
+def test_dot_flops_trip_count_scaled():
+    rep = ha.analyze(HLO)
+    # dot: 2 * (8*16) * 4 = 1024 flops, x7 loop passes
+    assert rep.dot_flops == 7 * 1024
+
+
+def test_collective_accounting():
+    rep = ha.analyze(HLO)
+    # all-reduce inside the loop: 2 * 512B * 15/16, x7
+    ar = rep.collectives["all-reduce"]
+    assert ar["count"] == 7
+    assert abs(ar["link_bytes"] - 7 * 2 * 512 * 15 / 16) < 1e-6
+    # all-gather at top level: out 8*64*4 = 2048B * 3/4, x1
+    ag = rep.collectives["all-gather"]
+    assert ag["count"] == 1
+    assert abs(ag["link_bytes"] - 2048 * 3 / 4) < 1e-6
+
+
+def test_elementwise_flops_counted():
+    rep = ha.analyze(HLO)
+    # adds: body 8*16 x7 + entry 8*16 (+ scalar add comp x ~counts)
+    assert rep.flops >= 7 * 1024 + 7 * 128 + 128
+
+
+def test_hbm_traffic_skips_control_ops():
+    rep = ha.analyze(HLO)
+    assert rep.hbm_bytes > 0
+    # parameter/tuple/gte contribute nothing directly
+    text_no_loop = HLO.replace('backend_config={"known_trip_count":{"n":"7"}}',
+                               "")
+    rep2 = ha.analyze(text_no_loop)
+    assert rep2.unknown_trip_loops == 1   # trip count now unknown
+    assert rep2.dot_flops == 1024         # counted once
+
+
+def test_memmodel_all_cells_estimable():
+    from repro.configs import SHAPES, all_names, applicable, get
+    from repro.launch import memmodel
+    for name in all_names():
+        cfg = get(name)
+        for shape in SHAPES.values():
+            if not applicable(cfg, shape)[0]:
+                continue
+            est = memmodel.estimate(cfg, shape)
+            assert est["total"] > 0
+            assert est["fits_16g"], (name, shape.name,
+                                     est["total"] / 2 ** 30)

@@ -1,0 +1,186 @@
+"""Pallas kernels vs pure-jnp oracles (interpret=True), shape/dtype sweeps."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.ame_gemm import ame_gemm, vmem_bytes
+from repro.kernels.attention import flash_attention
+from repro.kernels.elementwise import ame_elementwise
+from repro.kernels.ssd_scan import ssd_scan
+
+RNG = np.random.default_rng(42)
+
+
+def randn(*shape, dtype=jnp.float32, scale=1.0):
+    return jnp.asarray(RNG.standard_normal(shape) * scale, dtype)
+
+
+TOL = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+       jnp.bfloat16: dict(atol=0.06, rtol=0.06),
+       jnp.float16: dict(atol=0.02, rtol=0.02)}
+
+
+def allclose(got, want, dtype):
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# ame_gemm — shape x dtype x block sweep
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("m,k,n", [
+    (32, 32, 32), (128, 64, 128), (100, 130, 70), (1, 256, 64),
+    (257, 33, 129), (8, 8, 8),
+])
+def test_ame_gemm_vs_oracle(m, k, n, dtype):
+    a, b = randn(m, k, dtype=dtype, scale=0.3), randn(k, n, dtype=dtype, scale=0.3)
+    got = ame_gemm(a, b, block_m=32, block_n=32, block_k=32, interpret=True)
+    allclose(got, ref.gemm(a, b), dtype)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(16, 16, 16), (64, 32, 128), (128, 128, 64)])
+def test_ame_gemm_block_sweep(bm, bn, bk):
+    a, b = randn(96, 160, scale=0.3), randn(160, 96, scale=0.3)
+    got = ame_gemm(a, b, block_m=bm, block_n=bn, block_k=bk, interpret=True)
+    allclose(got, ref.gemm(a, b), jnp.float32)
+
+
+def test_ame_gemm_vmem_claim_fits():
+    # default blocks must fit a v5e VMEM (~16 MiB per core) with headroom
+    assert vmem_bytes() < 8 * 1024 * 1024
+
+
+def test_ame_gemm_out_dtype():
+    a, b = randn(64, 64, dtype=jnp.bfloat16), randn(64, 64, dtype=jnp.bfloat16)
+    got = ame_gemm(a, b, block_m=32, block_n=32, block_k=32,
+                   out_dtype=jnp.float32, interpret=True)
+    assert got.dtype == jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# elementwise — the fused PEP analogue
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", ["add", "sub", "mul"])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.float16])
+@pytest.mark.parametrize("m,c", [(128, 2048), (57, 129), (1, 8)])
+def test_elementwise_vs_oracle(kind, dtype, m, c):
+    a, b = randn(m, c, dtype=dtype), randn(m, c, dtype=dtype)
+    got = ame_elementwise(a, b, kind=kind, block_m=64, block_c=128,
+                          interpret=True)
+    allclose(got, ref.elementwise(kind, a, b), dtype)
+
+
+def test_elementwise_fused_relu():
+    a, b = randn(64, 64), randn(64, 64)
+    got = ame_elementwise(a, b, kind="add", relu=True, block_m=32,
+                          block_c=32, interpret=True)
+    allclose(got, ref.elementwise("add", a, b, relu=True), jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan — chunked vs sequential recurrence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,t,p,n,chunk", [
+    (2, 64, 16, 8, 16), (1, 100, 32, 16, 32), (3, 33, 8, 4, 16),
+    (1, 16, 8, 8, 16),
+])
+def test_ssd_scan_vs_recurrence(bh, t, p, n, chunk, dtype):
+    x = randn(bh, t, p, dtype=dtype, scale=0.5)
+    log_a = -jnp.abs(randn(bh, t, dtype=jnp.float32, scale=0.2))
+    b = randn(bh, t, n, dtype=dtype, scale=0.5)
+    c = randn(bh, t, n, dtype=dtype, scale=0.5)
+    got = ssd_scan(x, log_a, b, c, chunk=chunk, interpret=True)
+    want = jax.vmap(ref.ssd_scan)(x, log_a, b, c)
+    tol = dict(atol=1e-4, rtol=1e-3) if dtype == jnp.float32 else \
+        dict(atol=0.08, rtol=0.08)
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32), **tol)
+
+
+def test_ssd_state_carries_across_chunks():
+    """A long-decay sequence: late outputs must see early inputs."""
+    bh, t, p, n = 1, 64, 4, 4
+    x = jnp.zeros((bh, t, p)).at[0, 0].set(1.0)      # impulse at t=0
+    log_a = jnp.full((bh, t), -0.01)                  # slow decay
+    b = jnp.ones((bh, t, n))
+    c = jnp.ones((bh, t, n))
+    got = ssd_scan(x, log_a, b, c, chunk=16, interpret=True)
+    assert float(jnp.abs(got[0, -1]).max()) > 0.1     # impulse visible at end
+
+
+# ---------------------------------------------------------------------------
+# flash attention — causal, windowed, decode-aligned
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("bh,tq,tk,d,causal,window", [
+    (2, 64, 64, 32, True, 0),
+    (1, 128, 128, 64, True, 0),
+    (1, 100, 100, 32, True, 0),       # ragged seq vs block
+    (2, 64, 64, 32, False, 0),
+    (1, 128, 128, 32, True, 48),      # sliding window
+    (1, 16, 128, 32, True, 0),        # chunked decode: q tail-aligned
+])
+def test_flash_attention_vs_oracle(bh, tq, tk, d, causal, window, dtype):
+    q = randn(bh, tq, d, dtype=dtype, scale=0.5)
+    k = randn(bh, tk, d, dtype=dtype, scale=0.5)
+    v = randn(bh, tk, d, dtype=dtype, scale=0.5)
+    got = flash_attention(q, k, v, causal=causal, window=window,
+                          block_q=32, block_k=32, interpret=True)
+    want = jax.vmap(lambda q_, k_, v_: ref.attention(
+        q_, k_, v_, causal=causal, window=window))(q, k, v)
+    allclose(got, want, dtype)
+
+
+def test_flash_attention_block_sweep():
+    q = randn(1, 96, 32, scale=0.5)
+    k = randn(1, 96, 32, scale=0.5)
+    v = randn(1, 96, 32, scale=0.5)
+    want = jax.vmap(ref.attention)(q, k, v)
+    for bq, bk in [(16, 16), (32, 96), (96, 32)]:
+        got = flash_attention(q, k, v, block_q=bq, block_k=bk, interpret=True)
+        allclose(got, want, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# chunked-jnp SSD (the XLA-lowered production path) vs sequential oracle
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bh,t,p,n,chunk", [
+    (2, 64, 16, 8, 16), (1, 100, 32, 16, 32), (3, 33, 8, 4, 16),
+])
+def test_ssd_chunked_jnp_vs_recurrence(bh, t, p, n, chunk):
+    from repro.kernels.ssd_scan import ssd_chunked_jnp
+    x = randn(bh, t, p, scale=0.5)
+    log_a = -jnp.abs(randn(bh, t, dtype=jnp.float32, scale=0.2))
+    b = randn(bh, t, n, scale=0.5)
+    c = randn(bh, t, n, scale=0.5)
+    got = ssd_chunked_jnp(x, log_a, b, c, chunk=chunk)
+    want = jax.vmap(ref.ssd_scan)(x, log_a, b, c)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)
+
+
+def test_ssd4_vs_recurrence():
+    from repro.kernels import ops
+    b_, h_, t_, p_, n_ = 2, 3, 64, 8, 4
+    x = randn(b_, h_, t_, p_, scale=0.5)
+    log_a = -jnp.abs(randn(b_, h_, t_, dtype=jnp.float32, scale=0.2))
+    bb = randn(b_, h_, t_, n_, scale=0.5)
+    cc = randn(b_, h_, t_, n_, scale=0.5)
+    got = ops.ssd4(x, log_a, bb, cc, chunk=16)
+    want = jax.vmap(jax.vmap(ref.ssd_scan))(x, log_a, bb, cc)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-4, rtol=1e-3)

@@ -1,10 +1,12 @@
-"""Benchmark driver.  One section per paper table/figure plus the roofline
-summary (from dry-run artifacts, if present) and kernel micro-checks.
+"""Benchmark driver.  One section per paper table/figure, the device-runtime
+multi-pseudo-channel scaling sweep (``channels``), the roofline summary
+(from dry-run artifacts, if present), and kernel micro-checks.
 
 Prints ``name,us_per_call,derived`` CSV.
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig8       # one section
+  PYTHONPATH=src python -m benchmarks.run channels   # scaling sweep
 """
 from __future__ import annotations
 
@@ -62,6 +64,11 @@ def main() -> None:
     sections["roofline"] = roofline_summary
 
     wanted = sys.argv[1:] or list(sections)
+    unknown = [k for k in wanted if k not in sections]
+    if unknown:
+        print(f"unknown section(s) {unknown}; available: {sorted(sections)}",
+              file=sys.stderr)
+        sys.exit(2)
     print("name,us_per_call,derived")
     failures = 0
     for key in wanted:

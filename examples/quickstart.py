@@ -2,15 +2,19 @@
 
 1. Run AME instructions (mfadd/mfsub/mfmacc) on the functional Aquabolt-XL
    model and read the calibrated cycle costs (paper Figs 7-9).
-2. Run an end-to-end GEMM entirely "in PIM mode" and compare against the
-   reduction-free TPU kernel (ame_gemm, interpret mode on CPU).
+2. Run an end-to-end GEMM entirely "in PIM mode" through the device
+   runtime and compare against the reduction-free TPU kernel (ame_gemm,
+   interpret mode on CPU).
+3. Scale the same op across HBM pseudo-channels (the paper's future work)
+   and dump an HBM-PIMulator-compatible command trace.
 
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 import jax.numpy as jnp
 
-from repro.core import AMEEngine, UnsupportedOnPIM, max_tile_mfmacc, pim_gemm
+from repro.core import AMEEngine, UnsupportedOnPIM, max_tile_mfmacc
+from repro.runtime import PIMRuntime, emit_trace, parse_trace, pim_gemm
 from repro.kernels.ame_gemm import ame_gemm
 from repro.kernels import ref
 
@@ -56,15 +60,37 @@ def main():
     # --- 2. end-to-end GEMM in PIM mode + the TPU-adapted kernel ------------
     A = jnp.asarray(rng.standard_normal((256, 192)) * 0.2, jnp.float16)
     B = jnp.asarray(rng.standard_normal((192, 96)) * 0.2, jnp.float16)
-    C_pim, eng3 = pim_gemm(A, B)
-    print(f"\npim_gemm 256x192x96: {eng3.total_cycles:.0f} modeled cycles, "
-          f"{eng3.total_flops / eng3.total_cycles:.1f} FLOP/cycle")
+    C_pim, rep1 = pim_gemm(A, B)               # 1 pseudo-channel
+    print(f"\npim_gemm 256x192x96: {rep1.makespan_cycles:.0f} modeled "
+          f"cycles, {rep1.flop_per_cycle:.1f} FLOP/cycle at makespan")
     C_tpu = ame_gemm(A.astype(jnp.float32), B.astype(jnp.float32),
                      block_m=128, block_n=96, block_k=64, interpret=True)
     err = float(jnp.max(jnp.abs(C_tpu - ref.gemm(A.astype(jnp.float32),
                                                  B.astype(jnp.float32)))))
     print(f"ame_gemm (output-stationary Pallas kernel, interpret): "
           f"max err {err:.2e}")
+
+    # --- 3. the device runtime: multi-pseudo-channel scaling + traces -------
+    C_2ch, rep2 = pim_gemm(A, B, channels=2)   # output partitioning
+    assert np.array_equal(np.asarray(C_pim), np.asarray(C_2ch)), \
+        "multi-channel execution is bit-exact with single-channel"
+    print(f"\n2 pseudo-channels: {rep2.summary()}")
+    print(f"speedup vs 1ch: "
+          f"{rep1.makespan_cycles / rep2.makespan_cycles:.2f}x (makespan)")
+
+    # analytic mode sweeps paper-scale shapes without running numerics
+    big = np.zeros((512, 4096), np.float16), np.zeros((4096, 512), np.float16)
+    _, rep16 = pim_gemm(*big, channels=16, placement="2d-block",
+                        execute=False)
+    print(f"16ch 512x4096x512 (analytic): {rep16.gflops:.0f} GFLOP/s, "
+          f"util_min={min(rep16.utilizations()):.2f}")
+
+    # every execution can be dumped as an HBM-PIMulator-style trace
+    rt = PIMRuntime(channels=2)
+    rt.gemm(A[:32, :24], B[:24, :16])
+    stats = parse_trace(emit_trace(rt.stack))
+    print(f"command trace: {stats.pim_commands} PIM column commands, "
+          f"{stats.launches} PEP launches, opcodes={dict(stats.opcodes)}")
     print("\nquickstart OK")
 
 

@@ -6,7 +6,8 @@ Layers:
   pep      — the four PEP microkernels + tile memory layout (§3.2)
   cost     — calibrated cycle model (59.4 FLOP/cycle mfmacc headline, §4)
   engine   — AMEEngine: AME architectural state, pointer table, fast
-             order-exact execution, end-to-end PIM GEMM/GEMV
+             order-exact execution for ONE pseudo-channel (the leaf
+             executor; multi-channel execution lives in repro.runtime)
 """
 from repro.core.isa import (
     AMECSRState,
@@ -19,7 +20,15 @@ from repro.core.isa import (
     THEORETICAL_PEAK_FLOP_PER_CYCLE,
     UnsupportedOnPIM,
 )
-from repro.core.engine import AMEEngine, TileHandle, pim_gemm, pim_gemv
+from repro.core.engine import (
+    AMEEngine,
+    InstrRecord,
+    TileHandle,
+    ew_on_engine,
+    ew_tiles,
+    gemm_on_engine,
+    gemm_tiles,
+)
 from repro.core.cost import (
     PEPCostReport,
     elementwise_cost,
@@ -31,7 +40,8 @@ from repro.core.cost import (
 __all__ = [
     "AMECSRState", "AMEOp", "AME_TO_PIM", "PIMInstr", "PIMOpcode",
     "ROWNUM", "TILE_MAX_COLS", "THEORETICAL_PEAK_FLOP_PER_CYCLE",
-    "UnsupportedOnPIM", "AMEEngine", "TileHandle", "pim_gemm", "pim_gemv",
+    "UnsupportedOnPIM", "AMEEngine", "InstrRecord", "TileHandle",
+    "ew_on_engine", "ew_tiles", "gemm_on_engine", "gemm_tiles",
     "PEPCostReport", "elementwise_cost", "max_tile_mfmacc", "mfmacc_cost",
     "saturated_flop_per_cycle",
 ]

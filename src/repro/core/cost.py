@@ -34,7 +34,6 @@ from repro.core.isa import (
     AAM_BLOCKS,
     JUMP_MAX_ITERS,
     PIM_FREQ_HZ,
-    PSEUDO_CHANNELS,
     THEORETICAL_PEAK_FLOP_PER_CYCLE,
 )
 from repro.core.pep import (
@@ -79,12 +78,6 @@ class PEPCostReport:
     @property
     def seconds(self) -> float:
         return self.cycles / PIM_FREQ_HZ
-
-    def scaled(self, channels: int = PSEUDO_CHANNELS) -> "PEPCostReport":
-        """Aggregate over ``channels`` pseudo-channels working in parallel
-        on disjoint row-blocks (the paper's future-work scaling; each channel
-        runs the same command stream => same cycles, channels x FLOPs)."""
-        return dataclasses.replace(self, flops=self.flops * channels)
 
 
 def _report(kind: str, launches: int, passes: int, flops: int,

@@ -118,23 +118,39 @@ class TileHandle:
         return (r - self.row_off, c - self.col_off)
 
 
+@dataclasses.dataclass(frozen=True)
+class InstrRecord:
+    """One executed AME arithmetic instruction, with its active tile shape.
+
+    Enough to regenerate the exact PEP launch decomposition (and hence the
+    command trace) after the fact: ``kind`` in {add, mul, sub, mac}; for
+    element-wise ops ``n`` is 1 and ``k`` is the column count.
+    """
+
+    kind: str
+    m: int
+    k: int
+    n: int = 1
+
+
 class AMEEngine:
     """Executes the AME instruction subset of paper Table 1 on HBM-PIM.
 
-    ``channels`` > 1 models the multi-pseudo-channel scaling of the paper's
-    future work: row-blocks of a larger operand are striped across channels
-    that run the identical command stream in parallel (cycles unchanged,
-    FLOPs scaled) — the same lock-step philosophy one level up.
+    The engine models exactly ONE pseudo-channel — the leaf executor.
+    Multi-pseudo-channel execution lives one layer up in
+    :mod:`repro.runtime`, which partitions operands across per-channel
+    engines and reports makespan, rather than scaling FLOPs in place.
     """
 
-    def __init__(self, channels: int = 1):
-        self.channels = channels
+    def __init__(self):
         self.csr = AMECSRState()
         self.tr: Dict[int, Optional[TileHandle]] = {i: None for i in range(4)}
         self.acc: Dict[int, Optional[TileHandle]] = {i: None for i in range(4)}
         self.total_cycles = 0.0
         self.total_flops = 0
+        self.total_commands = 0
         self.log: List[cost_mod.PEPCostReport] = []
+        self.instrs: List[InstrRecord] = []
 
     # -- configuration (msettile*) ------------------------------------------
 
@@ -188,12 +204,13 @@ class AMEEngine:
         r, c = h.shape
         return min(r, self.csr.mtilem), min(c, self.csr.mtilek)
 
-    def _charge(self, rep: cost_mod.PEPCostReport) -> cost_mod.PEPCostReport:
-        if self.channels > 1:
-            rep = rep.scaled(self.channels)
+    def _charge(self, rep: cost_mod.PEPCostReport,
+                rec: InstrRecord) -> cost_mod.PEPCostReport:
         self.total_cycles += rep.cycles
         self.total_flops += rep.flops
+        self.total_commands += rep.commands
         self.log.append(rep)
+        self.instrs.append(rec)
         return rep
 
     def _ew(self, op: AMEOp, kind: str, fn, dst: int, a: int, b) -> cost_mod.PEPCostReport:
@@ -206,7 +223,8 @@ class AMEEngine:
         else:                                        # .mv.i form: row vector
             bv = jnp.broadcast_to(jnp.asarray(b, F16)[None, :k], (m, k))
         self.acc[dst] = TileHandle(fn(av, bv))
-        return self._charge(cost_mod.elementwise_cost(kind, m, k))
+        return self._charge(cost_mod.elementwise_cost(kind, m, k),
+                            InstrRecord(kind, m, k))
 
     def mfadd(self, dst: int, a: int, b) -> cost_mod.PEPCostReport:
         op = AMEOp.MFADD_MM if isinstance(b, int) else AMEOp.MFADD_MV
@@ -244,52 +262,92 @@ class AMEEngine:
         if acc is None or acc.shape != (m, n):
             acc = TileHandle(jnp.zeros((m, n), F16))
         self.acc[dst] = TileHandle(_mac_outer(acc.resolve()[:m, :n], av, bv))
-        return self._charge(cost_mod.mfmacc_cost(m, k, n))
+        return self._charge(cost_mod.mfmacc_cost(m, k, n),
+                            InstrRecord("mac", m, k, n))
 
 
 # ---------------------------------------------------------------------------
-# End-to-end blocked GEMM/GEMV in PIM mode (paper's "end-to-end execution")
+# Single-channel blocked execution (the runtime's leaf executors)
+#
+# Multi-channel GEMM/GEMV lives in repro.runtime: the scheduler partitions
+# operands across per-channel engines and calls these walkers per shard.
 # ---------------------------------------------------------------------------
 
 
-def pim_gemm(a: jnp.ndarray, b: jnp.ndarray,
-             channels: int = 1) -> Tuple[jnp.ndarray, AMEEngine]:
-    """C = A @ B executed entirely as AME mfmacc tiles on the PIM engine.
+def gemm_tiles(m: int, k: int, n: int):
+    """The blocked-GEMM tile walk: (i0, i1, j0, j1, c0, c1) in engine order.
 
-    Blocks A (M,K) and B (K,N) into <=128x4096 / <=4096x... tiles; rows of
-    the M dimension beyond 128 are striped across pseudo-channels first
-    (lock-step command reuse), then walked sequentially.  Returns the FP16
-    result and the engine (with its cycle/flop ledger).
+    Shared between the numeric executor (:func:`gemm_on_engine`) and the
+    runtime's analytic cost path so both charge identical ledgers.
     """
-    m, k = a.shape
-    k2, n = b.shape
-    assert k == k2
-    eng = AMEEngine(channels=channels)
     bm, bk, bn = ROWNUM, TILE_MAX_COLS, ROWNUM
-    out = np.zeros((m, n), np.float16)
     for i0 in range(0, m, bm):
         i1 = min(i0 + bm, m)
         for j0 in range(0, n, bn):
             j1 = min(j0 + bn, n)
+            for c0 in range(0, k, bk):
+                c1 = min(c0 + bk, k)
+                yield i0, i1, j0, j1, c0, c1
+
+
+def ew_tiles(m: int, c: int):
+    """Blocked element-wise tile walk: (i0, i1, c0, c1) in engine order."""
+    for i0 in range(0, m, ROWNUM):
+        i1 = min(i0 + ROWNUM, m)
+        for c0 in range(0, c, TILE_MAX_COLS):
+            c1 = min(c0 + TILE_MAX_COLS, c)
+            yield i0, i1, c0, c1
+
+
+def gemm_on_engine(eng: AMEEngine, a: jnp.ndarray,
+                   b: jnp.ndarray) -> np.ndarray:
+    """C = A @ B as AME mfmacc tiles on ONE pseudo-channel engine.
+
+    Blocks A (M,K) and B (K,N) into <=128x4096 tiles and walks them
+    sequentially, charging the engine's cycle/FLOP ledger.  Every output
+    element's accumulation order is ascending-k regardless of the M/N
+    blocking, so any output-space partition of a larger problem is
+    bit-exact with a single-engine run.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    out = np.zeros((m, n), np.float16)
+    last_ij = None
+    for i0, i1, j0, j1, c0, c1 in gemm_tiles(m, k, n):
+        if (i0, j0) != last_ij:
+            if last_ij is not None:
+                li, lj = last_ij
+                out[li:li + ROWNUM, lj:lj + ROWNUM] = np.asarray(eng.mst(0))
             eng.acc[0] = None
             eng.msettilem(i1 - i0)
             eng.msettilen(j1 - j0)
-            for c0 in range(0, k, bk):
-                c1 = min(c0 + bk, k)
-                eng.msettilek(c1 - c0)
-                eng.mld(0, a[i0:i1, c0:c1])
-                # B block enters as an (n x k) tile register consumed through
-                # the pointer table's transposed view (mld.t, paper §3.2.6) —
-                # this is what produces the K-major dense scalar layout the
-                # MAC-PEP broadcasts from.
-                eng.mld_t(1, jnp.asarray(b[c0:c1, j0:j1]).T)
-                eng.mfmacc(0, 0, 1)
-            out[i0:i1, j0:j1] = np.asarray(eng.mst(0))
-    return jnp.asarray(out), eng
+            last_ij = (i0, j0)
+        eng.msettilek(c1 - c0)
+        eng.mld(0, a[i0:i1, c0:c1])
+        # B block enters as an (n x k) tile register consumed through
+        # the pointer table's transposed view (mld.t, paper §3.2.6) —
+        # this is what produces the K-major dense scalar layout the
+        # MAC-PEP broadcasts from.
+        eng.mld_t(1, jnp.asarray(b[c0:c1, j0:j1]).T)
+        eng.mfmacc(0, 0, 1)
+    if last_ij is not None:
+        li, lj = last_ij
+        out[li:li + ROWNUM, lj:lj + ROWNUM] = np.asarray(eng.mst(0))
+    return out
 
 
-def pim_gemv(a: jnp.ndarray, x: jnp.ndarray,
-             channels: int = 1) -> Tuple[jnp.ndarray, AMEEngine]:
-    """y = A @ x in PIM mode (the MPC-Wrapper comparison workload)."""
-    y, eng = pim_gemm(a, x[:, None], channels=channels)
-    return y[:, 0], eng
+def ew_on_engine(eng: AMEEngine, kind: str, a: jnp.ndarray,
+                 b: jnp.ndarray) -> np.ndarray:
+    """Element-wise ``a <op> b`` blocked over ONE pseudo-channel engine."""
+    assert a.shape == b.shape and kind in ("add", "sub", "mul")
+    m, c = a.shape
+    out = np.zeros((m, c), np.float16)
+    for i0, i1, c0, c1 in ew_tiles(m, c):
+        eng.msettilem(i1 - i0)
+        eng.msettilek(c1 - c0)
+        eng.mld(0, a[i0:i1, c0:c1])
+        eng.mld(1, b[i0:i1, c0:c1])
+        getattr(eng, f"mf{kind}")(0, 0, 1)
+        out[i0:i1, c0:c1] = np.asarray(eng.mst(0))
+    return out

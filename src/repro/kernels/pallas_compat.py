@@ -1,0 +1,16 @@
+"""Version-compatibility shims for JAX Pallas TPU APIs.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` in newer
+JAX releases (and the old name later removed).  The kernels in this package
+target the new spelling; this module resolves whichever one the installed
+JAX provides so the same kernel source runs on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+#: ``pltpu.CompilerParams`` on new JAX, ``pltpu.TPUCompilerParams`` on old.
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+__all__ = ["CompilerParams"]

@@ -22,6 +22,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 DEFAULT_CHUNK = 128
 NEG = -1e30
 
@@ -177,7 +179,7 @@ def ssd_scan(x: jnp.ndarray, log_a: jnp.ndarray, b: jnp.ndarray,
         out_specs=pl.BlockSpec((1, lc, p), lambda i, tchunk: (i, tchunk, 0)),
         out_shape=jax.ShapeDtypeStruct((bh, tt, p), x.dtype),
         scratch_shapes=[pltpu.VMEM((n, p), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary"),
         ),
         interpret=interpret,

@@ -1,0 +1,51 @@
+"""Device-level PIM runtime: the layer between per-channel engines and
+workloads.
+
+Layers (bottom-up): ISA -> PEP -> channel interpreter -> AMEEngine (one
+pseudo-channel) -> **this runtime** (multi-pseudo-channel stack).  See
+``docs/runtime.md``.
+
+  device     — PIMStack / PIMDevice: 16 pseudo-channels, each an
+               independent AMEEngine + host<->PIM transfer accounting
+  placement  — pluggable data-placement policies (row-striped, 2d-block,
+               AMD-style balanced)
+  scheduler  — PIMRuntime: partitions GEMM/GEMV/element-wise ops per the
+               placement, dispatches per-channel command streams
+               asynchronously (makespan = max over channels), overlaps
+               transfers with PEP execution, reports RuntimeReport
+  trace      — HBM-PIMulator-compatible command-trace emitter + parser
+"""
+from repro.runtime.device import (
+    CHANNEL_BANDWIDTH_BYTES_PER_S,
+    PIMDevice,
+    PIMStack,
+    TRANSFER_BYTES_PER_COMMAND,
+    transfer_cycles,
+)
+from repro.runtime.placement import (
+    PLACEMENTS,
+    Shard,
+    balanced,
+    block_2d,
+    get_placement,
+    row_striped,
+    shard_mac_passes,
+    validate_cover,
+)
+from repro.runtime.scheduler import (
+    ChannelReport,
+    PIMRuntime,
+    RuntimeReport,
+    pim_gemm,
+    pim_gemv,
+)
+from repro.runtime.trace import TraceStats, dump_trace, emit_trace, parse_trace
+
+__all__ = [
+    "CHANNEL_BANDWIDTH_BYTES_PER_S", "PIMDevice", "PIMStack",
+    "TRANSFER_BYTES_PER_COMMAND", "transfer_cycles",
+    "PLACEMENTS", "Shard", "balanced", "block_2d", "get_placement",
+    "row_striped", "shard_mac_passes", "validate_cover",
+    "ChannelReport", "PIMRuntime", "RuntimeReport", "pim_gemm", "pim_gemv",
+    "TraceStats", "dump_trace", "emit_trace", "parse_trace",
+]

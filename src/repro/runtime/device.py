@@ -1,0 +1,178 @@
+"""Device-level model of one Aquabolt-XL HBM-PIM stack.
+
+A stack exposes :data:`~repro.core.isa.PSEUDO_CHANNELS` = 16 pseudo-channels
+(4 dies x 4), each with its own 8 PIM units executing an independent command
+stream.  The paper evaluates a single pseudo-channel and names multi-channel
+scaling as future work; this module is that missing layer:
+
+* :class:`PIMDevice` — one pseudo-channel: an :class:`~repro.core.engine.
+  AMEEngine` (compute ledger) plus a host<->PIM transfer ledger.  Transfers
+  are charged at the pseudo-channel command rate: one 32-byte bus transaction
+  per column command (the same bus the HBM-PIMulator trace format addresses
+  with its 5-bit column field), i.e. ``ceil(bytes / 32)`` cycles at the
+  250 MHz bus clock.
+* :class:`PIMStack` — the 16-channel device: indexing, reset, and aggregate
+  accounting.  The *makespan* semantics (total time = max over channels, not
+  sum) live in :mod:`repro.runtime.scheduler`, which owns dispatch order.
+
+Channels do not share PIM-visible state: all cross-channel data movement goes
+through the host and is accounted as transfers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Iterator, List, Tuple
+
+from repro.core.engine import AMEEngine
+from repro.core.isa import PIM_FREQ_HZ, PSEUDO_CHANNELS
+
+#: bytes moved per column command on one pseudo-channel bus (32-byte
+#: transaction granularity — one GRF entry / half a DRAM burst)
+TRANSFER_BYTES_PER_COMMAND = 32
+
+#: per-pseudo-channel host<->PIM bandwidth implied by the command model
+CHANNEL_BANDWIDTH_BYTES_PER_S = TRANSFER_BYTES_PER_COMMAND * PIM_FREQ_HZ
+
+
+def transfer_cycles(nbytes: int) -> int:
+    """Bus cycles to move ``nbytes`` over one pseudo-channel."""
+    return math.ceil(nbytes / TRANSFER_BYTES_PER_COMMAND)
+
+
+@dataclasses.dataclass
+class TransferLedger:
+    """Host<->PIM traffic of one pseudo-channel."""
+
+    h2d_bytes: int = 0
+    d2h_bytes: int = 0
+    h2d_cycles: int = 0
+    d2h_cycles: int = 0
+
+    @property
+    def total_bytes(self) -> int:
+        return self.h2d_bytes + self.d2h_bytes
+
+    @property
+    def total_cycles(self) -> int:
+        return self.h2d_cycles + self.d2h_cycles
+
+
+@dataclasses.dataclass
+class DeviceSnapshot:
+    """Ledger totals of one device at a point in time (for per-op deltas)."""
+
+    cycles: float
+    flops: int
+    commands: int
+    h2d_bytes: int
+    d2h_bytes: int
+    h2d_cycles: int
+    d2h_cycles: int
+
+
+class PIMDevice:
+    """One pseudo-channel: leaf engine + transfer ledger + event stream.
+
+    ``events`` records the device-visible history in dispatch order —
+    ``("h2d"|"d2h", nbytes)`` transfer markers and ``("instr", InstrRecord)``
+    entries appended by the scheduler after each shard executes — and is
+    what :mod:`repro.runtime.trace` serializes to a command trace.
+
+    Analytic (cost-only) scheduling charges ``analytic_*`` counters instead
+    of running the engine; :attr:`compute_cycles` etc. always report the sum
+    of both paths so mixed use stays consistent.
+    """
+
+    def __init__(self, channel_id: int):
+        self.channel_id = channel_id
+        self.engine = AMEEngine()
+        self.xfer = TransferLedger()
+        self.events: List[Tuple[str, object]] = []
+        self.analytic_cycles = 0.0
+        self.analytic_flops = 0
+        self.analytic_commands = 0
+
+    # -- compute ledger ------------------------------------------------------
+
+    @property
+    def compute_cycles(self) -> float:
+        return self.engine.total_cycles + self.analytic_cycles
+
+    @property
+    def compute_flops(self) -> int:
+        return self.engine.total_flops + self.analytic_flops
+
+    @property
+    def compute_commands(self) -> int:
+        return self.engine.total_commands + self.analytic_commands
+
+    def charge_analytic(self, cycles: float, flops: int,
+                        commands: int) -> None:
+        self.analytic_cycles += cycles
+        self.analytic_flops += flops
+        self.analytic_commands += commands
+
+    # -- transfers -----------------------------------------------------------
+
+    def host_to_pim(self, nbytes: int) -> int:
+        """Account a host->PIM transfer; returns its bus cycles."""
+        cyc = transfer_cycles(nbytes)
+        self.xfer.h2d_bytes += nbytes
+        self.xfer.h2d_cycles += cyc
+        self.events.append(("h2d", nbytes))
+        return cyc
+
+    def pim_to_host(self, nbytes: int) -> int:
+        """Account a PIM->host transfer; returns its bus cycles."""
+        cyc = transfer_cycles(nbytes)
+        self.xfer.d2h_bytes += nbytes
+        self.xfer.d2h_cycles += cyc
+        self.events.append(("d2h", nbytes))
+        return cyc
+
+    # -- snapshots (per-op deltas for RuntimeReport) -------------------------
+
+    def snapshot(self) -> DeviceSnapshot:
+        return DeviceSnapshot(
+            cycles=self.compute_cycles, flops=self.compute_flops,
+            commands=self.compute_commands,
+            h2d_bytes=self.xfer.h2d_bytes, d2h_bytes=self.xfer.d2h_bytes,
+            h2d_cycles=self.xfer.h2d_cycles, d2h_cycles=self.xfer.d2h_cycles)
+
+
+class PIMStack:
+    """An HBM-PIM stack: up to 16 independent pseudo-channels."""
+
+    def __init__(self, channels: int = PSEUDO_CHANNELS):
+        assert 1 <= channels <= PSEUDO_CHANNELS, \
+            f"a stack has at most {PSEUDO_CHANNELS} pseudo-channels"
+        self.devices = [PIMDevice(i) for i in range(channels)]
+
+    def __len__(self) -> int:
+        return len(self.devices)
+
+    def __getitem__(self, ch: int) -> PIMDevice:
+        return self.devices[ch]
+
+    def __iter__(self) -> Iterator[PIMDevice]:
+        return iter(self.devices)
+
+    # -- aggregates ----------------------------------------------------------
+
+    @property
+    def total_flops(self) -> int:
+        return sum(d.compute_flops for d in self.devices)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(d.xfer.total_bytes for d in self.devices)
+
+    @property
+    def busy_cycles(self) -> float:
+        """Sum of per-channel busy time (NOT wall-clock; see scheduler)."""
+        return sum(d.compute_cycles + d.xfer.total_cycles
+                   for d in self.devices)
+
+    def reset(self) -> None:
+        self.__init__(len(self.devices))

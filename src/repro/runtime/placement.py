@@ -1,0 +1,196 @@
+"""Data-placement policies: partitioning one op across pseudo-channels.
+
+A placement maps a GEMM/GEMV iteration space (M, K, N) onto pseudo-channels
+as a list of :class:`Shard` — axis-aligned boxes that form a *disjoint exact
+cover* of the M x K x N compute cuboid (property-tested).  Channel-level
+placement, not kernel code, decides whether multi-channel PIM scales (AMD's
+*Balanced Data Placement for GEMV Acceleration with PIM*, 2024) — hence
+placements are pluggable and named:
+
+* ``row-striped``  — contiguous runs of 128-row blocks per channel, full K
+  and N.  Pure output partitioning: bit-exact with a single-channel run,
+  but starves channels when M / 128 < channels (skinny GEMV).
+* ``2d-block``     — channels factored into a near-square (pr x pc) grid
+  over M x N, full K.  Also pure output partitioning; for GEMM
+  512x4096x512 on 16 channels every channel gets exactly the paper's
+  128x4096x128 max tile.
+* ``balanced``     — AMD-style: equalize per-channel MAC passes.  With at
+  least one row block per channel this is LPT (longest-processing-time)
+  assignment of row blocks; with fewer blocks than channels it splits K
+  (AAM-aligned) so every channel works, at the price of a host-side
+  reduction of FP16 partials (accounted by the scheduler).
+
+Shards with ``k0 > 0`` or ``k1 < K`` are *partial* products; the scheduler
+reduces them on the host in ascending-k order.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, List
+
+from repro.core.engine import gemm_tiles
+from repro.core.isa import AAM_BLOCKS, ROWNUM
+
+
+@dataclasses.dataclass(frozen=True)
+class Shard:
+    """One channel's axis-aligned box of the (M, K, N) iteration space."""
+
+    channel: int
+    m0: int
+    m1: int
+    k0: int
+    k1: int
+    n0: int
+    n1: int
+
+    @property
+    def rows(self) -> int:
+        return self.m1 - self.m0
+
+    @property
+    def ks(self) -> int:
+        return self.k1 - self.k0
+
+    @property
+    def ns(self) -> int:
+        return self.n1 - self.n0
+
+    @property
+    def flops(self) -> int:
+        return 2 * self.rows * self.ks * self.ns
+
+    @property
+    def volume(self) -> int:
+        return self.rows * self.ks * self.ns
+
+    def is_partial(self, k: int) -> bool:
+        """True if this shard computes a partial product needing reduction."""
+        return self.k0 > 0 or self.k1 < k
+
+
+def shard_mac_passes(s: Shard) -> int:
+    """Exact MAC-PEP loop passes the engine issues for this shard."""
+    return sum(math.ceil((c1 - c0) / AAM_BLOCKS) * (j1 - j0)
+               for _, _, j0, j1, c0, c1 in gemm_tiles(s.rows, s.ks, s.ns))
+
+
+def validate_cover(shards: List[Shard], m: int, k: int, n: int) -> None:
+    """Assert the shards are a disjoint exact cover of M x K x N."""
+    vol = 0
+    for s in shards:
+        assert 0 <= s.m0 < s.m1 <= m and 0 <= s.k0 < s.k1 <= k \
+            and 0 <= s.n0 < s.n1 <= n, f"shard out of bounds: {s}"
+        vol += s.volume
+    assert vol == m * k * n, f"cover volume {vol} != {m * k * n}"
+    for i, a in enumerate(shards):         # disjointness: no box overlap
+        for b in shards[i + 1:]:
+            if (a.m0 < b.m1 and b.m0 < a.m1 and a.k0 < b.k1
+                    and b.k0 < a.k1 and a.n0 < b.n1 and b.n0 < a.n1):
+                raise AssertionError(f"overlapping shards: {a} / {b}")
+
+
+def _row_blocks(m: int) -> List[range]:
+    return [range(i0, min(i0 + ROWNUM, m)) for i0 in range(0, m, ROWNUM)]
+
+
+def _chunks(total: int, parts: int) -> List[int]:
+    """Split ``total`` into ``parts`` near-equal non-negative integers."""
+    q, r = divmod(total, parts)
+    return [q + (1 if i < r else 0) for i in range(parts)]
+
+
+def row_striped(m: int, k: int, n: int, channels: int) -> List[Shard]:
+    """Contiguous runs of 128-row blocks per channel; full K, full N."""
+    blocks = _row_blocks(m)
+    sizes = _chunks(len(blocks), min(channels, len(blocks)))
+    shards, b = [], 0
+    for ch, nb in enumerate(sizes):
+        if nb == 0:
+            continue
+        m0 = blocks[b].start
+        m1 = blocks[b + nb - 1].stop
+        shards.append(Shard(ch, m0, m1, 0, k, 0, n))
+        b += nb
+    return shards
+
+
+def block_2d(m: int, k: int, n: int, channels: int) -> List[Shard]:
+    """Near-square (pr x pc) channel grid over M x N; full K per shard."""
+    blocks = _row_blocks(m)
+    pr = max(1, min(int(math.sqrt(channels)), len(blocks)))
+    while channels % pr:
+        pr -= 1
+    pc = min(channels // pr, n)
+    row_sizes = _chunks(len(blocks), pr)
+    col_sizes = _chunks(n, pc)
+    shards, ch, b = [], 0, 0
+    for rsz in row_sizes:
+        if rsz == 0:
+            continue
+        m0, m1 = blocks[b].start, blocks[b + rsz - 1].stop
+        b += rsz
+        n0 = 0
+        for csz in col_sizes:
+            if csz == 0:
+                continue
+            shards.append(Shard(ch, m0, m1, 0, k, n0, n0 + csz))
+            ch += 1
+            n0 += csz
+    return shards
+
+
+def balanced(m: int, k: int, n: int, channels: int) -> List[Shard]:
+    """Equalize per-channel MAC passes (AMD balanced placement).
+
+    With >= 1 row block per channel: LPT assignment of row blocks to the
+    least-loaded channel (ties broken by channel id), which also handles
+    ragged last blocks.  With fewer blocks than channels: split each
+    block's K range across its share of channels, AAM-aligned, so every
+    channel contributes — the scheduler reduces the FP16 partials.
+    """
+    blocks = _row_blocks(m)
+    if len(blocks) >= channels:
+        load = [0] * channels
+        shards: List[Shard] = []
+        order = sorted(blocks, key=lambda blk: -Shard(
+            0, blk.start, blk.stop, 0, k, 0, n).volume)
+        for blk in order:
+            ch = min(range(channels), key=lambda c: (load[c], c))
+            s = Shard(ch, blk.start, blk.stop, 0, k, 0, n)
+            load[ch] += shard_mac_passes(s)
+            shards.append(s)
+        return sorted(shards, key=lambda s: (s.channel, s.m0))
+
+    # fewer row blocks than channels: split K, AAM_BLOCKS-aligned
+    shares = _chunks(channels, len(blocks))
+    kgroups = math.ceil(k / AAM_BLOCKS)
+    shards, ch = [], 0
+    for blk, share in zip(blocks, shares):
+        share = max(1, min(share, kgroups))
+        g0 = 0
+        for gsz in _chunks(kgroups, share):
+            if gsz == 0:
+                continue
+            k0 = g0 * AAM_BLOCKS
+            k1 = min((g0 + gsz) * AAM_BLOCKS, k)
+            shards.append(Shard(ch, blk.start, blk.stop, k0, k1, 0, n))
+            ch += 1
+            g0 += gsz
+    return shards
+
+
+PLACEMENTS: Dict[str, Callable[[int, int, int, int], List[Shard]]] = {
+    "row-striped": row_striped,
+    "2d-block": block_2d,
+    "balanced": balanced,
+}
+
+
+def get_placement(name: str) -> Callable[[int, int, int, int], List[Shard]]:
+    try:
+        return PLACEMENTS[name]
+    except KeyError:
+        raise KeyError(f"unknown placement {name!r}; "
+                       f"available: {sorted(PLACEMENTS)}") from None

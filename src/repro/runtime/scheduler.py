@@ -1,0 +1,318 @@
+"""Command-queue scheduler: dispatch one op across pseudo-channels.
+
+The scheduler partitions a GEMM/GEMV/element-wise op according to a
+placement policy (:mod:`repro.runtime.placement`), enqueues each shard's
+command stream on its pseudo-channel's engine, and reports *makespan*
+semantics: channels run asynchronously, so wall-clock time is the maximum
+per-channel busy time, never the sum.
+
+Per-channel busy time models transfer/compute overlap the way a
+double-buffered host DMA behaves on real PIM parts (PrIM's lesson that
+host<->PIM traffic dominates unless overlapped):
+
+    busy = lead_in + max(compute, h2d - lead_in) + d2h
+
+where ``lead_in`` is the transfer time of the channel's *first* operand
+tile pair (nothing to overlap with yet), the remaining input traffic
+streams behind compute, and results drain after the last PEP retires.
+
+Shards that split K produce FP16 partial products; the scheduler ships
+each partial back to the host (accounted as d2h traffic) and reduces them
+in ascending-k order — the host-side reduction that balanced placement
+trades for utilization.
+
+Both execution modes charge *identical* ledgers (property-tested):
+
+* ``execute=True``  — numerics run on each channel's :class:`AMEEngine`
+  (order-exact FP16); output-space placements are bit-exact with a
+  single-channel run.
+* ``execute=False`` — analytic: only the cost model runs, for large-shape
+  sweeps (the benchmark channel-scaling section).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import cost as cost_mod
+from repro.core.engine import (
+    InstrRecord,
+    ew_on_engine,
+    ew_tiles,
+    gemm_on_engine,
+    gemm_tiles,
+)
+from repro.core.isa import PIM_FREQ_HZ
+from repro.runtime.device import PIMDevice, PIMStack, transfer_cycles
+from repro.runtime.placement import Shard, get_placement, validate_cover
+
+F16 = np.float16
+BYTES_PER_ELEM = 2  # FP16
+
+
+# ---------------------------------------------------------------------------
+# Reports
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ChannelReport:
+    """One pseudo-channel's share of an op."""
+
+    channel: int
+    compute_cycles: float
+    flops: int
+    commands: int
+    h2d_bytes: int
+    d2h_bytes: int
+    h2d_cycles: int
+    d2h_cycles: int
+    lead_in_cycles: int
+
+    @property
+    def busy_cycles(self) -> float:
+        """Wall-clock busy time under the overlap model (module docstring)."""
+        if self.compute_cycles == 0 and self.h2d_cycles == 0 \
+                and self.d2h_cycles == 0:
+            return 0.0
+        stream = max(self.compute_cycles, self.h2d_cycles
+                     - self.lead_in_cycles)
+        return self.lead_in_cycles + stream + self.d2h_cycles
+
+    def utilization(self, makespan: float) -> float:
+        """Fraction of the op's wall-clock this channel spent computing."""
+        return self.compute_cycles / makespan if makespan else 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeReport:
+    """Device-level account of one scheduled op."""
+
+    op: str
+    shape: Tuple[int, ...]
+    placement: str
+    channels: int                     # pseudo-channels in the stack
+    per_channel: Tuple[ChannelReport, ...]
+
+    @property
+    def makespan_cycles(self) -> float:
+        return max((c.busy_cycles for c in self.per_channel), default=0.0)
+
+    @property
+    def total_flops(self) -> int:
+        return sum(c.flops for c in self.per_channel)
+
+    @property
+    def total_commands(self) -> int:
+        return sum(c.commands for c in self.per_channel)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(c.h2d_bytes + c.d2h_bytes for c in self.per_channel)
+
+    @property
+    def flop_per_cycle(self) -> float:
+        """Effective throughput at makespan (the scaling headline)."""
+        return self.total_flops / self.makespan_cycles
+
+    @property
+    def gflops(self) -> float:
+        return self.flop_per_cycle * PIM_FREQ_HZ / 1e9
+
+    @property
+    def seconds(self) -> float:
+        return self.makespan_cycles / PIM_FREQ_HZ
+
+    def utilizations(self) -> List[float]:
+        mk = self.makespan_cycles
+        return [c.utilization(mk) for c in self.per_channel]
+
+    def summary(self) -> str:
+        us = self.utilizations()
+        busy = [c for c in self.per_channel if c.busy_cycles > 0]
+        return (f"{self.op} {'x'.join(map(str, self.shape))} "
+                f"[{self.placement}, {self.channels}ch, {len(busy)} busy]: "
+                f"makespan={self.makespan_cycles:.0f}cyc "
+                f"{self.gflops:.1f}GFLOP/s "
+                f"util(min/mean/max)={min(us):.2f}/"
+                f"{sum(us) / len(us):.2f}/{max(us):.2f} "
+                f"bytes={self.total_bytes}")
+
+
+# ---------------------------------------------------------------------------
+# The runtime
+# ---------------------------------------------------------------------------
+
+
+class PIMRuntime:
+    """Schedules ops onto a :class:`PIMStack` and accounts them."""
+
+    def __init__(self, channels: int = 1, stack: Optional[PIMStack] = None):
+        self.stack = stack if stack is not None else PIMStack(channels)
+
+    # -- internals -----------------------------------------------------------
+
+    def _record_instrs(self, dev: PIMDevice, n_before: int) -> None:
+        for rec in dev.engine.instrs[n_before:]:
+            dev.events.append(("instr", rec))
+
+    def _finish(self, op: str, shape: Tuple[int, ...], placement: str,
+                before: Dict[int, "object"],
+                lead_in: Dict[int, int]) -> RuntimeReport:
+        reports = []
+        for dev in self.stack:
+            b = before[dev.channel_id]
+            reports.append(ChannelReport(
+                channel=dev.channel_id,
+                compute_cycles=dev.compute_cycles - b.cycles,
+                flops=dev.compute_flops - b.flops,
+                commands=dev.compute_commands - b.commands,
+                h2d_bytes=dev.xfer.h2d_bytes - b.h2d_bytes,
+                d2h_bytes=dev.xfer.d2h_bytes - b.d2h_bytes,
+                h2d_cycles=dev.xfer.h2d_cycles - b.h2d_cycles,
+                d2h_cycles=dev.xfer.d2h_cycles - b.d2h_cycles,
+                lead_in_cycles=lead_in.get(dev.channel_id, 0)))
+        return RuntimeReport(op=op, shape=shape, placement=placement,
+                             channels=len(self.stack),
+                             per_channel=tuple(reports))
+
+    # -- GEMM / GEMV ---------------------------------------------------------
+
+    def gemm(self, a: jnp.ndarray, b: jnp.ndarray, *,
+             placement: str = "row-striped",
+             execute: bool = True
+             ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
+        """C = A(m,k) @ B(k,n) partitioned across the stack's channels."""
+        m, k = a.shape
+        k2, n = b.shape
+        assert k == k2, (a.shape, b.shape)
+        shards = get_placement(placement)(m, k, n, len(self.stack))
+        validate_cover(shards, m, k, n)
+
+        before = {d.channel_id: d.snapshot() for d in self.stack}
+        lead_in: Dict[int, int] = {}
+        out = np.zeros((m, n), F16) if execute else None
+        partials: Dict[Tuple[int, int, int, int],
+                       List[Tuple[int, np.ndarray]]] = {}
+
+        for s in shards:
+            dev = self.stack[s.channel]
+            if s.channel not in lead_in:
+                i0, i1, j0, j1, c0, c1 = next(gemm_tiles(s.rows, s.ks, s.ns))
+                lead_in[s.channel] = transfer_cycles(
+                    ((i1 - i0) * (c1 - c0) + (c1 - c0) * (j1 - j0))
+                    * BYTES_PER_ELEM)
+            dev.host_to_pim(s.rows * s.ks * BYTES_PER_ELEM)   # A shard
+            dev.host_to_pim(s.ks * s.ns * BYTES_PER_ELEM)     # B shard
+            if execute:
+                n_before = len(dev.engine.instrs)
+                sub = gemm_on_engine(dev.engine,
+                                     a[s.m0:s.m1, s.k0:s.k1],
+                                     b[s.k0:s.k1, s.n0:s.n1])
+                self._record_instrs(dev, n_before)
+                if s.is_partial(k):
+                    partials.setdefault((s.m0, s.m1, s.n0, s.n1), []) \
+                        .append((s.k0, sub))
+                else:
+                    out[s.m0:s.m1, s.n0:s.n1] = sub
+            else:
+                for i0, i1, j0, j1, c0, c1 in gemm_tiles(s.rows, s.ks, s.ns):
+                    rep = cost_mod.mfmacc_cost(i1 - i0, c1 - c0, j1 - j0)
+                    dev.charge_analytic(rep.cycles, rep.flops, rep.commands)
+                    dev.events.append(
+                        ("instr",
+                         InstrRecord("mac", i1 - i0, c1 - c0, j1 - j0)))
+            dev.pim_to_host(s.rows * s.ns * BYTES_PER_ELEM)   # C (or partial)
+
+        if execute:
+            # host-side reduction of K-split partials, ascending-k FP16
+            for (m0, m1, n0, n1), parts in partials.items():
+                acc: Optional[np.ndarray] = None
+                for _, arr in sorted(parts, key=lambda t: t[0]):
+                    acc = arr if acc is None else (acc + arr).astype(F16)
+                out[m0:m1, n0:n1] = acc
+
+        report = self._finish("gemm", (m, k, n), placement, before, lead_in)
+        return (jnp.asarray(out) if execute else None), report
+
+    def gemv(self, a: jnp.ndarray, x: jnp.ndarray, *,
+             placement: str = "row-striped",
+             execute: bool = True
+             ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
+        """y = A @ x (the MPC-Wrapper comparison workload), as N=1 GEMM."""
+        y, rep = self.gemm(a, x[:, None], placement=placement,
+                           execute=execute)
+        rep = dataclasses.replace(rep, op="gemv")
+        return (y[:, 0] if y is not None else None), rep
+
+    # -- element-wise --------------------------------------------------------
+
+    def elementwise(self, kind: str, a: jnp.ndarray, b: jnp.ndarray, *,
+                    placement: str = "row-striped",
+                    execute: bool = True
+                    ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
+        """out = a <kind> b partitioned over the (M, C) output grid.
+
+        Placements reuse the GEMM shard geometry with the column axis in
+        the K slot and N=1; a K-split shard is just a column slab here, so
+        every placement is an exact output partition (no reduction).
+        """
+        assert kind in ("add", "sub", "mul")
+        assert a.shape == b.shape
+        m, c = a.shape
+        shards = get_placement(placement)(m, c, 1, len(self.stack))
+        validate_cover(shards, m, c, 1)
+
+        before = {d.channel_id: d.snapshot() for d in self.stack}
+        lead_in: Dict[int, int] = {}
+        out = np.zeros((m, c), F16) if execute else None
+
+        for s in shards:
+            dev = self.stack[s.channel]
+            if s.channel not in lead_in:
+                i0, i1, c0, c1 = next(ew_tiles(s.rows, s.ks))
+                lead_in[s.channel] = transfer_cycles(
+                    2 * (i1 - i0) * (c1 - c0) * BYTES_PER_ELEM)
+            dev.host_to_pim(2 * s.rows * s.ks * BYTES_PER_ELEM)  # both operands
+            if execute:
+                n_before = len(dev.engine.instrs)
+                sub = ew_on_engine(dev.engine, kind,
+                                   a[s.m0:s.m1, s.k0:s.k1],
+                                   b[s.m0:s.m1, s.k0:s.k1])
+                self._record_instrs(dev, n_before)
+                out[s.m0:s.m1, s.k0:s.k1] = sub
+            else:
+                for i0, i1, c0, c1 in ew_tiles(s.rows, s.ks):
+                    rep = cost_mod.elementwise_cost(kind, i1 - i0, c1 - c0)
+                    dev.charge_analytic(rep.cycles, rep.flops, rep.commands)
+                    dev.events.append(
+                        ("instr", InstrRecord(kind, i1 - i0, c1 - c0)))
+            dev.pim_to_host(s.rows * s.ks * BYTES_PER_ELEM)
+
+        report = self._finish(f"ew-{kind}", (m, c), placement, before,
+                              lead_in)
+        return (jnp.asarray(out) if execute else None), report
+
+
+# ---------------------------------------------------------------------------
+# Convenience entry points (the end-to-end PIM-mode API)
+# ---------------------------------------------------------------------------
+
+
+def pim_gemm(a: jnp.ndarray, b: jnp.ndarray, channels: int = 1,
+             placement: str = "row-striped", execute: bool = True
+             ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
+    """C = A @ B entirely in PIM mode on a fresh ``channels``-wide stack."""
+    return PIMRuntime(channels=channels).gemm(a, b, placement=placement,
+                                              execute=execute)
+
+
+def pim_gemv(a: jnp.ndarray, x: jnp.ndarray, channels: int = 1,
+             placement: str = "row-striped", execute: bool = True
+             ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
+    """y = A @ x entirely in PIM mode on a fresh ``channels``-wide stack."""
+    return PIMRuntime(channels=channels).gemv(a, x, placement=placement,
+                                              execute=execute)

@@ -1,0 +1,281 @@
+"""HBM-PIMulator-compatible command-trace emission and parsing.
+
+Any runtime execution (numeric or analytic) can be dumped as a ``.trace``
+file: one line per DRAM column command, in the line grammar of the
+HBM-PIMulator trace format (yang2919/HBM-PIMulator), so traces can be fed
+to trace-driven simulators and cross-checked against both the cost model
+and the strict interpreter (:mod:`repro.core.pim`) — the emitter derives
+per-pass base addresses from the *same* schedule functions
+(:func:`repro.core.pep.mac_pass_coords`, the ``run_*_strict`` base tables),
+so command counts match the strict interpreter exactly.
+
+Line grammar::
+
+    # comment
+    AB W                          -- enter AB-PIM mode (one per PEP launch)
+    W CFR "<idx>" <OPCODE>        -- program one CRF slot
+    W MEM <ch> <bank> <row>       -- one 32-byte host->PIM transaction
+    R MEM <ch> <bank> <row>       -- one 32-byte PIM->host transaction
+    PIM <OP> [DST] [SRC0] [SRC1]  -- one column command of PEP execution
+
+Operand rendering: ``GRF_A`` index i -> ``GRF,i``; ``GRF_B`` -> ``GRF,8+i``
+(GRF_B occupies the upper CRF encoding half); ``SRF_A`` -> ``SRF,i``;
+``SRF_M`` -> ``SRF,8+i``; even-bank block a -> ``BANK,2a``; odd-bank block
+a -> ``BANK,2a+1`` (even/odd banks interleave in the bank address bits).
+
+JUMP and EXIT issue zero column commands (paper §2.3.3) and are not
+emitted; a trace's ``PIM`` line count therefore equals the engine ledger's
+``commands`` — the round-trip property the tests pin.
+
+Traces are *expanded* (one line per command): dump small ops, not the
+benchmark sweep shapes.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import re
+from typing import Dict, List, Optional
+
+from repro.core.engine import InstrRecord
+from repro.core.isa import (
+    AAM_BLOCKS,
+    GRF_REGS,
+    Operand,
+    OperandSpace,
+    PIMInstr,
+    PIMOpcode,
+    SIMD_LANES,
+    SRF_REGS,
+)
+from repro.core.pep import (
+    BA0,
+    BT0,
+    BT1,
+    MINUS_ONE_BLOCK,
+    ZERO_BLOCK,
+    ChannelMemoryMap,
+    build_ew_pep,
+    build_mac_pep,
+    build_sub_pep,
+    ew_invocations,
+    mac_invocations,
+    mac_pass_coords,
+)
+from repro.runtime.device import PIMStack, transfer_cycles
+
+#: fixed block bases used for trace address resolution (mirrors
+#: :func:`repro.core.pep.init_channel` with its default region sizes)
+_MM = ChannelMemoryMap(tiles=(2 + 2048, 2 + 2048 + 2048), accs=(0, 2048))
+
+#: 32-byte transactions per notional 1 KB DRAM row (HBM-PIMulator's
+#: 5-bit column field)
+_COLS_PER_ROW = 32
+_BANKS = 16
+
+HEADER = """\
+# AME-PIM runtime command trace (HBM-PIMulator line grammar)
+#
+# AB W                          -- enter AB-PIM mode (one per PEP launch)
+# W CFR "[CFR_id]" [opcode]     -- CRF microkernel programming
+# R/W MEM [channel] [bank] [row]-- one 32-byte host<->PIM transaction
+# PIM [OP] [DST] [SRC0] [SRC1]  -- one column command of PEP execution
+#
+# operands: (GRF, id) (SRF, id) (BANK, block address)
+# GRF 0-7 = GRF_A, GRF 8-15 = GRF_B; SRF 0-7 = SRF_A, SRF 8-15 = SRF_M
+# BANK 2a = even-bank block a, BANK 2a+1 = odd-bank block a
+# JUMP/EXIT are zero-command (predecoded) and do not appear."""
+
+
+# ---------------------------------------------------------------------------
+# Emission
+# ---------------------------------------------------------------------------
+
+
+def _render(op: Operand, bases: Dict[str, int], b: int) -> str:
+    step = op.index + b * op.step
+    if op.space is OperandSpace.GRF_A:
+        return f"GRF,{step}"
+    if op.space is OperandSpace.GRF_B:
+        return f"GRF,{GRF_REGS + step}"
+    if op.space is OperandSpace.SRF_A:
+        return f"SRF,{step}"
+    if op.space is OperandSpace.SRF_M:
+        return f"SRF,{SRF_REGS + step}"
+    if op.space is OperandSpace.ZERO:
+        return "BANK,0"
+    addr = bases.get(op.base, 0) + op.index + b * op.step
+    if op.space is OperandSpace.EVEN_BANK:
+        return f"BANK,{2 * addr}"
+    if op.space is OperandSpace.ODD_BANK:
+        return f"BANK,{2 * addr + 1}"
+    raise ValueError(op.space)
+
+
+def _pim_lines(ins: PIMInstr, bases: Dict[str, int]) -> List[str]:
+    """Expand one CRF instruction into its column-command trace lines."""
+    if ins.op in (PIMOpcode.JUMP, PIMOpcode.EXIT):
+        return []
+    reps = AAM_BLOCKS if ins.aam else 1
+    out = []
+    for b in range(reps):
+        parts = [f"PIM {ins.op.value.upper()}"]
+        for o in (ins.dst, ins.src0, ins.src1):
+            if o is not None:
+                parts.append(_render(o, bases, b))
+        out.append(" ".join(parts))
+    return out
+
+
+def _expand_launch(lines: List[str], crf: List[PIMInstr],
+                   iter_bases, passes: int,
+                   setup_bases: Optional[Dict[str, int]] = None) -> None:
+    """One PEP launch: mode switch, CRF programming, then every pass."""
+    lines.append("AB W")
+    for idx, ins in enumerate(crf):
+        lines.append(f'W CFR "{idx}" {ins.op.value.upper()}')
+    loop_start = next((i.jump_target for i in crf
+                       if i.op is PIMOpcode.JUMP), 0)
+    for ins in crf[:loop_start]:                    # one-time prologue
+        lines.extend(_pim_lines(ins, setup_bases or {}))
+    for t in range(passes):
+        bases = iter_bases(t)
+        for ins in crf[loop_start:]:
+            lines.extend(_pim_lines(ins, bases))
+
+
+def _expand_mac(lines: List[str], rec: InstrRecord) -> None:
+    a_base, acc_base = _MM.tiles[0], _MM.accs[0]
+    for inv in mac_invocations(rec.k, rec.n):
+        def bases(t: int, _inv=inv) -> Dict[str, int]:
+            j, k0 = mac_pass_coords(_inv.start + t, rec.k)
+            saddr = j * rec.k + k0
+            return {BA0: acc_base + j, BT0: a_base + k0,
+                    BT1: _MM.b_scalars + saddr // SIMD_LANES,
+                    ZERO_BLOCK: _MM.zero}
+        _expand_launch(lines, build_mac_pep(inv.passes), bases, inv.passes)
+
+
+def _expand_ew(lines: List[str], rec: InstrRecord) -> None:
+    a_base, b_base, acc_base = _MM.tiles[0], _MM.tiles[1], _MM.accs[0]
+    for col0, passes in ew_invocations(rec.k):
+        if rec.kind == "sub":
+            crf = build_sub_pep(passes)
+        else:
+            crf = build_ew_pep(
+                PIMOpcode.ADD if rec.kind == "add" else PIMOpcode.MUL,
+                passes)
+
+        def bases(t: int, _c0=col0) -> Dict[str, int]:
+            c = _c0 + t * AAM_BLOCKS
+            return {BT0: a_base + c, BT1: b_base + c, BA0: acc_base + c,
+                    MINUS_ONE_BLOCK: _MM.minus_one, ZERO_BLOCK: _MM.zero}
+
+        _expand_launch(lines, crf, bases, passes,
+                       setup_bases={MINUS_ONE_BLOCK: _MM.minus_one})
+
+
+def _mem_lines(kind: str, channel: int, nbytes: int) -> List[str]:
+    rw = "W" if kind == "h2d" else "R"
+    out = []
+    for i in range(transfer_cycles(nbytes)):
+        bank = i % _BANKS
+        row = i // (_BANKS * _COLS_PER_ROW)
+        out.append(f"{rw} MEM {channel} {bank} {row}")
+    return out
+
+
+def emit_trace(stack: PIMStack) -> str:
+    """Serialize everything the stack's devices have executed so far."""
+    lines = [HEADER]
+    for dev in stack:
+        lines.append(f"# channel {dev.channel_id}")
+        for kind, payload in dev.events:
+            if kind in ("h2d", "d2h"):
+                lines.extend(_mem_lines(kind, dev.channel_id, payload))
+            elif kind == "instr":
+                rec: InstrRecord = payload
+                if rec.kind == "mac":
+                    _expand_mac(lines, rec)
+                else:
+                    _expand_ew(lines, rec)
+            else:
+                raise ValueError(kind)
+    return "\n".join(lines) + "\n"
+
+
+def dump_trace(stack: PIMStack, path: str) -> int:
+    """Write the stack's trace to ``path``; returns the line count."""
+    text = emit_trace(stack)
+    with open(path, "w") as f:
+        f.write(text)
+    return text.count("\n")
+
+
+# ---------------------------------------------------------------------------
+# Parsing (round-trip checks / trace-driven replay entry point)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class TraceStats:
+    """Counts reconstructed from a trace file."""
+
+    pim_commands: int = 0
+    launches: int = 0                  # AB-mode switches
+    cfr_writes: int = 0
+    opcodes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    pim_per_channel: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    mem_writes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per channel
+    mem_reads: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per channel
+
+    @property
+    def channels(self):
+        return sorted(set(self.pim_per_channel)
+                      | set(self.mem_writes) | set(self.mem_reads))
+
+
+_CHANNEL_RE = re.compile(r"^# channel (\d+)$")
+_MEM_RE = re.compile(r"^([RW]) MEM (\d+) (\d+) (\d+)$")
+_PIM_RE = re.compile(r"^PIM ([A-Z]+)((?: [A-Z]+,\d+)*)$")
+_CFR_RE = re.compile(r'^W CFR "(\d+)" ([A-Z]+)$')
+
+
+def parse_trace(text: str) -> TraceStats:
+    """Parse an emitted trace back into per-channel command counts."""
+    stats = TraceStats()
+    channel = 0
+    for lineno, line in enumerate(text.splitlines(), 1):
+        line = line.rstrip()
+        if not line:
+            continue
+        mm = _CHANNEL_RE.match(line)
+        if mm:
+            channel = int(mm.group(1))
+            continue
+        if line.startswith("#"):
+            continue
+        if line == "AB W":
+            stats.launches += 1
+            continue
+        mm = _CFR_RE.match(line)
+        if mm:
+            stats.cfr_writes += 1
+            continue
+        mm = _MEM_RE.match(line)
+        if mm:
+            tgt = stats.mem_writes if mm.group(1) == "W" else stats.mem_reads
+            tgt[int(mm.group(2))] += 1
+            continue
+        mm = _PIM_RE.match(line)
+        if mm:
+            stats.pim_commands += 1
+            stats.opcodes[mm.group(1)] += 1
+            stats.pim_per_channel[channel] += 1
+            continue
+        raise ValueError(f"unparseable trace line {lineno}: {line!r}")
+    return stats

@@ -1,0 +1,225 @@
+"""Device-level runtime tests: placement covers, makespan semantics,
+multi-channel bit-exactness, ledger parity, and trace round-trips."""
+import numpy as np
+import pytest
+
+from repro.core import cost as cost_mod
+from repro.core.pep import init_channel, run_mac_strict
+from repro.runtime import (
+    PIMRuntime,
+    PLACEMENTS,
+    get_placement,
+    pim_gemm,
+    pim_gemv,
+    transfer_cycles,
+    validate_cover,
+)
+from repro.runtime.placement import shard_mac_passes
+from repro.runtime.trace import emit_trace, parse_trace
+
+RNG = np.random.default_rng(7)
+
+
+def rand(m, n, scale=0.2):
+    return (RNG.standard_normal((m, n)) * scale).astype(np.float16)
+
+
+# ---------------------------------------------------------------------------
+# placement
+# ---------------------------------------------------------------------------
+
+SHAPES = [
+    (128, 64, 32),       # one row block
+    (512, 4096, 512),    # the benchmark GEMM
+    (256, 2048, 1),      # skinny GEMV
+    (1000, 100, 7),      # ragged everything
+    (64, 8, 1),          # tiny
+    (2048, 256, 128),    # more blocks than channels
+]
+
+
+@pytest.mark.parametrize("name", sorted(PLACEMENTS))
+@pytest.mark.parametrize("m,k,n", SHAPES)
+@pytest.mark.parametrize("channels", [1, 3, 16])
+def test_placement_is_disjoint_exact_cover(name, m, k, n, channels):
+    shards = get_placement(name)(m, k, n, channels)
+    validate_cover(shards, m, k, n)            # raises on overlap/hole
+    assert all(0 <= s.channel < channels for s in shards)
+
+
+def test_balanced_uses_all_channels_on_skinny_gemv():
+    shards = get_placement("balanced")(256, 2048, 1, 16)
+    assert len({s.channel for s in shards}) == 16
+    loads = {}
+    for s in shards:
+        loads[s.channel] = loads.get(s.channel, 0) + shard_mac_passes(s)
+    assert max(loads.values()) <= 2 * min(loads.values())
+
+
+def test_row_striped_starves_channels_on_skinny_gemv():
+    shards = get_placement("row-striped")(256, 2048, 1, 16)
+    assert len({s.channel for s in shards}) == 2   # only 2 row blocks
+
+
+def test_unknown_placement_raises():
+    with pytest.raises(KeyError):
+        get_placement("interleaved")
+
+
+# ---------------------------------------------------------------------------
+# scheduler: makespan, FLOP totals, bit-exactness
+# ---------------------------------------------------------------------------
+
+
+def test_makespan_is_max_over_channels_not_sum():
+    a, b = rand(256, 160), rand(160, 192)
+    _, rep = pim_gemm(a, b, channels=4)
+    busy = [c.busy_cycles for c in rep.per_channel]
+    assert rep.makespan_cycles == max(busy)
+    assert rep.makespan_cycles < sum(busy)
+    # busy model: lead-in + overlapped streaming + drain
+    for c in rep.per_channel:
+        if c.busy_cycles:
+            assert c.busy_cycles == c.lead_in_cycles + max(
+                c.compute_cycles, c.h2d_cycles - c.lead_in_cycles
+            ) + c.d2h_cycles
+
+
+@pytest.mark.parametrize("placement", ["row-striped", "2d-block"])
+@pytest.mark.parametrize("channels", [2, 4, 16])
+def test_multi_channel_gemm_bit_exact_with_single_channel(placement,
+                                                          channels):
+    a, b = rand(384, 96), rand(96, 160)
+    out1, rep1 = pim_gemm(a, b, channels=1)
+    outn, repn = pim_gemm(a, b, channels=channels, placement=placement)
+    np.testing.assert_array_equal(np.asarray(out1), np.asarray(outn))
+    assert rep1.total_flops == repn.total_flops
+
+
+def test_flop_totals_pinned_across_channels_and_placements():
+    """Regression for the old channels-FLOP double count: every channel
+    count and placement charges exactly 2*M*K*N FLOPs."""
+    m, k, n = 256, 320, 24
+    a, b = rand(m, k), rand(k, n)
+    for channels in (1, 2, 8, 16):
+        for placement in sorted(PLACEMENTS):
+            _, rep = pim_gemm(a, b, channels=channels, placement=placement)
+            assert rep.total_flops == 2 * m * k * n, (channels, placement)
+
+
+def test_balanced_gemv_close_to_fp32_and_faster():
+    a, x = rand(256, 2048, 0.1), rand(2048, 1, 0.1)[:, 0]
+    ref = a.astype(np.float32) @ x.astype(np.float32)
+    y_rs, rep_rs = pim_gemv(a, x, channels=16, placement="row-striped")
+    y_bal, rep_bal = pim_gemv(a, x, channels=16, placement="balanced")
+    np.testing.assert_allclose(np.asarray(y_rs, np.float32), ref,
+                               atol=0.05, rtol=0.05)
+    np.testing.assert_allclose(np.asarray(y_bal, np.float32), ref,
+                               atol=0.05, rtol=0.05)
+    # the acceptance headline: balanced beats row-striped on skinny GEMV
+    assert rep_bal.makespan_cycles < rep_rs.makespan_cycles
+
+
+def test_analytic_mode_charges_identical_ledgers():
+    a, b = rand(300, 520), rand(520, 130)
+    for placement in sorted(PLACEMENTS):
+        _, rep_x = PIMRuntime(channels=4).gemm(a, b, placement=placement)
+        _, rep_a = PIMRuntime(channels=4).gemm(a, b, placement=placement,
+                                               execute=False)
+        for cx, ca in zip(rep_x.per_channel, rep_a.per_channel):
+            assert cx.compute_cycles == ca.compute_cycles
+            assert cx.flops == ca.flops
+            assert cx.commands == ca.commands
+            assert cx.h2d_bytes == ca.h2d_bytes
+            assert cx.d2h_bytes == ca.d2h_bytes
+        assert rep_x.makespan_cycles == rep_a.makespan_cycles
+
+
+def test_transfer_accounting_row_striped():
+    m, k, n = 256, 64, 32
+    _, rep = pim_gemm(rand(m, k), rand(k, n), channels=2)
+    half = m // 2
+    for c in rep.per_channel:
+        assert c.h2d_bytes == (half * k + k * n) * 2
+        assert c.d2h_bytes == half * n * 2
+        assert c.h2d_cycles == transfer_cycles(c.h2d_bytes)
+
+
+def test_elementwise_runtime_matches_engine_and_partitions():
+    a, b = rand(300, 96), rand(300, 96)
+    rt = PIMRuntime(channels=4)
+    out, rep = rt.elementwise("add", a, b)
+    np.testing.assert_array_equal(
+        np.asarray(out), (a.astype(np.float16) + b.astype(np.float16)))
+    assert rep.total_flops == 300 * 96
+    assert rep.makespan_cycles == max(c.busy_cycles for c in rep.per_channel)
+
+
+def test_runtime_rejects_oversized_stack():
+    with pytest.raises(AssertionError):
+        PIMRuntime(channels=17)
+
+
+# ---------------------------------------------------------------------------
+# trace emission / parsing
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrips_through_parser():
+    rt = PIMRuntime(channels=2)
+    a, b = rand(200, 24), rand(24, 8)          # 2 row blocks -> both channels
+    _, rep = rt.gemm(a, b)
+    _, rep2 = rt.elementwise("sub", rand(140, 40), rand(140, 40))
+    stats = parse_trace(emit_trace(rt.stack))
+    # one PIM line per column command, summed over both ops
+    assert stats.pim_commands == rep.total_commands + rep2.total_commands
+    # every h2d/d2h byte shows up as a 32-byte MEM transaction
+    for c in rep.per_channel:
+        ch2 = next(x for x in rep2.per_channel if x.channel == c.channel)
+        assert stats.mem_writes[c.channel] == \
+            c.h2d_cycles + ch2.h2d_cycles
+        assert stats.mem_reads[c.channel] == \
+            c.d2h_cycles + ch2.d2h_cycles
+    # launches: one AB-mode switch per PEP launch
+    assert stats.launches == sum(r.launches for d in rt.stack
+                                 for r in d.engine.log)
+    assert set(stats.channels) == {0, 1}
+    assert stats.opcodes["MAC"] > 0 and stats.opcodes["MUL"] > 0
+
+
+def test_trace_analytic_mode_matches_numeric_trace_counts():
+    a, b = rand(40, 56), rand(56, 24)
+    rt_x, rt_a = PIMRuntime(channels=2), PIMRuntime(channels=2)
+    rt_x.gemm(a, b)
+    rt_a.gemm(a, b, execute=False)
+    sx = parse_trace(emit_trace(rt_x.stack))
+    sa = parse_trace(emit_trace(rt_a.stack))
+    assert sx.pim_commands == sa.pim_commands
+    assert sx.opcodes == sa.opcodes
+
+
+def test_trace_command_count_cross_checks_strict_interpreter():
+    """The emitted trace, the cost model, and the strict interpreter all
+    agree on column commands for the same mfmacc."""
+    k, n = 24, 8
+    ch, mm = init_channel(nblocks=6200)
+    strict_cmds = run_mac_strict(ch, mm, a_base=mm.tiles[0],
+                                 acc_base=mm.accs[0], k=k, n=n)
+    assert strict_cmds == cost_mod.mfmacc_cost(128, k, n).commands
+
+    rt = PIMRuntime(channels=1)
+    rt.gemm(rand(128, k), rand(k, n))
+    stats = parse_trace(emit_trace(rt.stack))
+    assert stats.pim_commands == strict_cmds
+
+
+def test_trace_dump_and_unparseable_line(tmp_path):
+    from repro.runtime import dump_trace
+    rt = PIMRuntime(channels=1)
+    rt.gemm(rand(8, 8), rand(8, 4))
+    p = tmp_path / "op.trace"
+    nlines = dump_trace(rt.stack, str(p))
+    assert nlines == len(p.read_text().splitlines())
+    assert parse_trace(p.read_text()).pim_commands > 0
+    with pytest.raises(ValueError):
+        parse_trace("PIM FROB GRF;0\n")

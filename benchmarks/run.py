@@ -1,5 +1,7 @@
 """Benchmark driver.  One section per paper table/figure, the device-runtime
-multi-pseudo-channel scaling sweep (``channels``), the roofline summary
+multi-pseudo-channel scaling sweep (``channels``), the operand-residency /
+serve-offload sweep (``residency`` — also writes the
+``results/dryrun/*.pim_offload.json`` BENCH artifact), the roofline summary
 (from dry-run artifacts, if present), and kernel micro-checks.
 
 Prints ``name,us_per_call,derived`` CSV.
@@ -7,6 +9,7 @@ Prints ``name,us_per_call,derived`` CSV.
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig8       # one section
   PYTHONPATH=src python -m benchmarks.run channels   # scaling sweep
+  PYTHONPATH=src python -m benchmarks.run residency  # resident operands
 """
 from __future__ import annotations
 

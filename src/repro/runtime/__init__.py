@@ -7,13 +7,17 @@ pseudo-channel) -> **this runtime** (multi-pseudo-channel stack).  See
 
   device     — PIMStack / PIMDevice: 16 pseudo-channels, each an
                independent AMEEngine + host<->PIM transfer accounting
+               + per-channel operand-residency tables
   placement  — pluggable data-placement policies (row-striped, 2d-block,
-               AMD-style balanced)
+               AMD-style balanced) + operand-footprint boxes
+  residency  — DeviceTensor handles: operands/outputs resident per
+               channel, zero h2d on reuse (PIMRuntime.place)
   scheduler  — PIMRuntime: partitions GEMM/GEMV/element-wise ops per the
                placement, dispatches per-channel command streams
                asynchronously (makespan = max over channels), overlaps
                transfers with PEP execution, reports RuntimeReport
   trace      — HBM-PIMulator-compatible command-trace emitter + parser
+               (resident reuses round-trip as replay-neutral comments)
 """
 from repro.runtime.device import (
     CHANNEL_BANDWIDTH_BYTES_PER_S,
@@ -27,11 +31,13 @@ from repro.runtime.placement import (
     Shard,
     balanced,
     block_2d,
+    box_contains,
     get_placement,
     row_striped,
     shard_mac_passes,
     validate_cover,
 )
+from repro.runtime.residency import BYTES_PER_ELEM, DeviceTensor, box_bytes
 from repro.runtime.scheduler import (
     ChannelReport,
     PIMRuntime,
@@ -44,8 +50,9 @@ from repro.runtime.trace import TraceStats, dump_trace, emit_trace, parse_trace
 __all__ = [
     "CHANNEL_BANDWIDTH_BYTES_PER_S", "PIMDevice", "PIMStack",
     "TRANSFER_BYTES_PER_COMMAND", "transfer_cycles",
-    "PLACEMENTS", "Shard", "balanced", "block_2d", "get_placement",
-    "row_striped", "shard_mac_passes", "validate_cover",
+    "PLACEMENTS", "Shard", "balanced", "block_2d", "box_contains",
+    "get_placement", "row_striped", "shard_mac_passes", "validate_cover",
+    "BYTES_PER_ELEM", "DeviceTensor", "box_bytes",
     "ChannelReport", "PIMRuntime", "RuntimeReport", "pim_gemm", "pim_gemv",
     "TraceStats", "dump_trace", "emit_trace", "parse_trace",
 ]

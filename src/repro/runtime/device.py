@@ -22,14 +22,23 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Iterator, List, Tuple
+from typing import Dict, Iterator, List, Tuple
 
 from repro.core.engine import AMEEngine
 from repro.core.isa import PIM_FREQ_HZ, PSEUDO_CHANNELS
+from repro.runtime.placement import box_contains
 
 #: bytes moved per column command on one pseudo-channel bus (32-byte
 #: transaction granularity — one GRF entry / half a DRAM burst)
 TRANSFER_BYTES_PER_COMMAND = 32
+
+#: FP16 operand element size — all runtime transfers/residency are FP16
+BYTES_PER_ELEM = 2
+
+
+def box_bytes(box: Tuple[int, int, int, int]) -> int:
+    """FP16 bytes of one (r0, r1, c0, c1) operand box."""
+    return (box[1] - box[0]) * (box[3] - box[2]) * BYTES_PER_ELEM
 
 #: per-pseudo-channel host<->PIM bandwidth implied by the command model
 CHANNEL_BANDWIDTH_BYTES_PER_S = TRANSFER_BYTES_PER_COMMAND * PIM_FREQ_HZ
@@ -69,6 +78,8 @@ class DeviceSnapshot:
     d2h_bytes: int
     h2d_cycles: int
     d2h_cycles: int
+    reuse_bytes: int = 0
+    dedupe_bytes: int = 0
 
 
 class PIMDevice:
@@ -92,6 +103,12 @@ class PIMDevice:
         self.analytic_cycles = 0.0
         self.analytic_flops = 0
         self.analytic_commands = 0
+        # operand residency: tensor uid -> resident 2D boxes (r0, r1, c0, c1)
+        # in that tensor's own coordinates.  Owned by the scheduler /
+        # repro.runtime.residency; the device just stores and queries.
+        self.resident: Dict[int, List[Tuple[int, int, int, int]]] = {}
+        self.reuse_bytes = 0    # h2d avoided by cross-op operand residency
+        self.dedupe_bytes = 0   # h2d avoided by within-op slice dedupe
 
     # -- compute ledger ------------------------------------------------------
 
@@ -131,6 +148,53 @@ class PIMDevice:
         self.events.append(("d2h", nbytes))
         return cyc
 
+    def note_reuse(self, nbytes: int) -> None:
+        """Account a resident-operand reuse: zero bus traffic, event only.
+
+        ``nbytes`` is the h2d transfer *avoided* — what the fresh-transfer
+        path would have shipped for the same shard.
+        """
+        self.reuse_bytes += nbytes
+        self.events.append(("reuse", nbytes))
+
+    def note_dedupe(self, nbytes: int) -> None:
+        """Account a within-op repeated-slice dedupe (e.g. the GEMV x
+        vector across same-channel K-split shards): zero bus traffic.
+
+        Kept separate from :meth:`note_reuse` so residency invariants
+        ("reuse == weight bytes") stay exact on both the fresh and the
+        resident path; the trace marker is the same ``reuse`` event.
+        """
+        self.dedupe_bytes += nbytes
+        self.events.append(("reuse", nbytes))
+
+    # -- residency table -----------------------------------------------------
+
+    def add_resident(self, uid: int,
+                     box: Tuple[int, int, int, int]) -> None:
+        """Record that ``box`` of tensor ``uid`` now lives on this channel."""
+        self.resident.setdefault(uid, []).append(box)
+
+    def has_resident(self, uid: int,
+                     box: Tuple[int, int, int, int]) -> bool:
+        """True if ``box`` is contained in a resident region of ``uid``."""
+        return any(box_contains(b, box)
+                   for b in self.resident.get(uid, ()))
+
+    def drop_resident(self, uid: int) -> None:
+        """Forget all of tensor ``uid``'s regions (eviction, no traffic)."""
+        self.resident.pop(uid, None)
+
+    def resident_bytes_of(self, uid: int) -> int:
+        """Bytes of tensor ``uid`` resident on this channel."""
+        return sum(box_bytes(b) for b in self.resident.get(uid, ()))
+
+    @property
+    def resident_bytes(self) -> int:
+        """Bytes of operand data currently resident on this channel."""
+        return sum(box_bytes(b) for boxes in self.resident.values()
+                   for b in boxes)
+
     # -- snapshots (per-op deltas for RuntimeReport) -------------------------
 
     def snapshot(self) -> DeviceSnapshot:
@@ -138,7 +202,8 @@ class PIMDevice:
             cycles=self.compute_cycles, flops=self.compute_flops,
             commands=self.compute_commands,
             h2d_bytes=self.xfer.h2d_bytes, d2h_bytes=self.xfer.d2h_bytes,
-            h2d_cycles=self.xfer.h2d_cycles, d2h_cycles=self.xfer.d2h_cycles)
+            h2d_cycles=self.xfer.h2d_cycles, d2h_cycles=self.xfer.d2h_cycles,
+            reuse_bytes=self.reuse_bytes, dedupe_bytes=self.dedupe_bytes)
 
 
 class PIMStack:
@@ -167,6 +232,10 @@ class PIMStack:
     @property
     def total_bytes(self) -> int:
         return sum(d.xfer.total_bytes for d in self.devices)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(d.resident_bytes for d in self.devices)
 
     @property
     def busy_cycles(self) -> float:

@@ -27,7 +27,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable, Dict, List
+from typing import Callable, Dict, List, Tuple
 
 from repro.core.engine import gemm_tiles
 from repro.core.isa import AAM_BLOCKS, ROWNUM
@@ -68,6 +68,35 @@ class Shard:
     def is_partial(self, k: int) -> bool:
         """True if this shard computes a partial product needing reduction."""
         return self.k0 > 0 or self.k1 < k
+
+    # -- operand footprints (2D boxes in each operand's own coordinates) ----
+    #
+    # The residency layer (repro.runtime.residency) keys per-channel
+    # resident regions by these boxes, so "is this shard's A slice already
+    # on its channel?" is a containment check against the same geometry the
+    # scheduler transfers.
+
+    @property
+    def a_box(self) -> Tuple[int, int, int, int]:
+        """Footprint of this shard in the A operand: (m0, m1, k0, k1)."""
+        return (self.m0, self.m1, self.k0, self.k1)
+
+    @property
+    def b_box(self) -> Tuple[int, int, int, int]:
+        """Footprint of this shard in the B operand: (k0, k1, n0, n1)."""
+        return (self.k0, self.k1, self.n0, self.n1)
+
+    @property
+    def out_box(self) -> Tuple[int, int, int, int]:
+        """Footprint of this shard in the output: (m0, m1, n0, n1)."""
+        return (self.m0, self.m1, self.n0, self.n1)
+
+
+def box_contains(outer: Tuple[int, int, int, int],
+                 inner: Tuple[int, int, int, int]) -> bool:
+    """True if 2D box ``inner`` lies entirely inside ``outer``."""
+    return (outer[0] <= inner[0] and inner[1] <= outer[1]
+            and outer[2] <= inner[2] and inner[3] <= outer[3])
 
 
 def shard_mac_passes(s: Shard) -> int:

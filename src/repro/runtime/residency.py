@@ -1,0 +1,124 @@
+"""Operand residency: device-resident tensor handles for the PIM runtime.
+
+PrIM's central lesson is that host<->PIM transfer dominates real PIM
+workloads unless data stays resident.  The scheduler's default path
+re-ships every operand shard per op — correct accounting for one-shot
+ops, but wrong for the serve-loop regime where the same weight matrix is
+reused every decode step.  This module is the residency layer:
+
+* :class:`DeviceTensor` — a handle to a host array whose shards live on
+  the stack's pseudo-channels.  The handle records *which* 2D boxes of
+  the tensor are resident on *which* channel (mirrored into each
+  :class:`~repro.runtime.device.PIMDevice`'s residency table); the
+  scheduler consults it per shard and charges **zero** h2d for resident
+  regions, appending a ``reuse`` event so traces stay replayable.
+* :func:`place` — eagerly uploads an array's shards per a placement
+  policy (the "load the weights once" step), charging the one-time h2d
+  and returning the handle.  Handles may also be created lazily: a miss
+  during an op transfers the shard *and* marks it resident, so repeated
+  ops converge to zero weight traffic either way.
+
+Outputs can stay resident too (``keep_output=True`` on the scheduler
+ops): the op then charges no d2h for exact-cover output shards; the
+drain is deferred until :meth:`DeviceTensor.to_host`, and a chained op
+consuming the handle on the same channel boxes never pays it at all —
+the GEMM->elementwise epilogue fusion the ROADMAP names.
+
+Numerics are unchanged by residency: ``execute=True`` runs the same
+per-channel engines over the same host mirror, so resident-handle
+outputs are bit-exact with the fresh-transfer path (property-tested).
+Analytic handles (shape-only, ``values=None``) support paper-scale
+sweeps without materializing weights.
+"""
+from __future__ import annotations
+
+import itertools
+from typing import List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.runtime.device import BYTES_PER_ELEM, PIMStack, box_bytes
+
+Box = Tuple[int, int, int, int]
+
+_uid = itertools.count(1)
+
+
+class DeviceTensor:
+    """A 2D tensor with per-channel shard residency on a :class:`PIMStack`.
+
+    ``values`` is the host mirror (FP16) that execute-mode engines compute
+    from — residency changes *accounting*, never numerics.  ``values`` is
+    ``None`` for analytic (shape-only) handles, which only cost-model
+    sweeps may consume.
+
+    ``pending_d2h`` holds output boxes computed on-device but not yet
+    drained to the host; :meth:`to_host` charges their d2h then returns
+    the mirror.
+
+    ``copy=True`` (the default, and what :meth:`PIMRuntime.place` uses)
+    snapshots the caller's array: on real hardware resident data cannot
+    change without a transfer, so later host-side mutation of the source
+    must not leak into the "resident" copy.  The scheduler's own
+    ``keep_output`` handles pass ``copy=False`` — they deliberately alias
+    the op's output buffer so the host-side K-split reduction lands in
+    the mirror.
+    """
+
+    def __init__(self, stack: PIMStack, shape: Tuple[int, int],
+                 values: Optional[np.ndarray] = None, copy: bool = True):
+        assert len(shape) == 2, shape
+        self.uid = next(_uid)
+        self.stack = stack
+        self.shape = tuple(shape)
+        if values is None:
+            self.values = None
+        elif copy:
+            self.values = np.array(values, np.float16, copy=True)
+        else:
+            self.values = np.asarray(values, np.float16)
+        self.pending_d2h: List[Tuple[int, Box]] = []   # (channel, box)
+
+    # -- residency queries / updates (delegate to the device tables) --------
+
+    def is_resident(self, channel: int, box: Box) -> bool:
+        return self.stack[channel].has_resident(self.uid, box)
+
+    def mark_resident(self, channel: int, box: Box) -> None:
+        self.stack[channel].add_resident(self.uid, box)
+
+    @property
+    def resident_bytes(self) -> int:
+        """Total bytes of this tensor resident across all channels
+        (> host size when placements replicate regions)."""
+        return sum(d.resident_bytes_of(self.uid) for d in self.stack)
+
+    # -- host materialization ------------------------------------------------
+
+    def to_host(self) -> Optional[jnp.ndarray]:
+        """Drain pending output shards (charged as d2h) and return the
+        host array (``None`` for analytic handles)."""
+        for channel, box in self.pending_d2h:
+            self.stack[channel].pim_to_host(box_bytes(box))
+        self.pending_d2h = []
+        return jnp.asarray(self.values) if self.values is not None else None
+
+    def evict(self) -> None:
+        """Drop all residency (capacity reclaim).  No traffic is charged;
+        un-drained outputs are lost unless :meth:`to_host` ran first."""
+        for dev in self.stack:
+            dev.drop_resident(self.uid)
+        self.pending_d2h = []
+
+    def resolve(self) -> np.ndarray:
+        """Host mirror for execute-mode engines; rejects analytic handles."""
+        assert self.values is not None, \
+            "analytic (shape-only) DeviceTensor cannot be executed " \
+            "numerically; pass execute=False or place a real array"
+        return self.values
+
+    def __repr__(self) -> str:
+        mode = "analytic" if self.values is None else "numeric"
+        return (f"DeviceTensor(uid={self.uid}, shape={self.shape}, "
+                f"{mode}, resident_bytes={self.resident_bytes})")

@@ -16,23 +16,33 @@ where ``lead_in`` is the transfer time of the channel's *first* operand
 tile pair (nothing to overlap with yet), the remaining input traffic
 streams behind compute, and results drain after the last PEP retires.
 
+Operands may be host arrays (shipped in full every op, the one-shot
+default) or :class:`~repro.runtime.residency.DeviceTensor` handles whose
+shards already live on their channels: resident regions charge **zero**
+h2d (a ``reuse`` event keeps the trace replayable), misses transfer and
+become resident for the next op.  ``keep_output=True`` leaves exact-cover
+output shards resident instead of draining them — the d2h is deferred to
+:meth:`DeviceTensor.to_host` and skipped entirely when a chained op
+consumes the handle in place (element-wise epilogue fusion).
+
 Shards that split K produce FP16 partial products; the scheduler ships
 each partial back to the host (accounted as d2h traffic) and reduces them
 in ascending-k order — the host-side reduction that balanced placement
-trades for utilization.
+trades for utilization.  Partial output shards therefore always drain,
+even under ``keep_output``: the reduced value only exists on the host.
 
 Both execution modes charge *identical* ledgers (property-tested):
 
 * ``execute=True``  — numerics run on each channel's :class:`AMEEngine`
   (order-exact FP16); output-space placements are bit-exact with a
-  single-channel run.
+  single-channel run, with or without residency.
 * ``execute=False`` — analytic: only the cost model runs, for large-shape
-  sweeps (the benchmark channel-scaling section).
+  sweeps (the benchmark channel-scaling and residency sections).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Set, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -47,10 +57,13 @@ from repro.core.engine import (
 )
 from repro.core.isa import PIM_FREQ_HZ
 from repro.runtime.device import PIMDevice, PIMStack, transfer_cycles
-from repro.runtime.placement import Shard, get_placement, validate_cover
+from repro.runtime.placement import get_placement, validate_cover
+from repro.runtime.residency import BYTES_PER_ELEM, Box, DeviceTensor, \
+    box_bytes
 
 F16 = np.float16
-BYTES_PER_ELEM = 2  # FP16
+
+Operand = Union[jnp.ndarray, np.ndarray, DeviceTensor]
 
 
 # ---------------------------------------------------------------------------
@@ -71,6 +84,8 @@ class ChannelReport:
     h2d_cycles: int
     d2h_cycles: int
     lead_in_cycles: int
+    reuse_bytes: int = 0    # h2d avoided by cross-op operand residency
+    dedupe_bytes: int = 0   # h2d avoided by within-op slice dedupe
 
     @property
     def busy_cycles(self) -> float:
@@ -114,9 +129,35 @@ class RuntimeReport:
         return sum(c.h2d_bytes + c.d2h_bytes for c in self.per_channel)
 
     @property
+    def total_h2d_bytes(self) -> int:
+        return sum(c.h2d_bytes for c in self.per_channel)
+
+    @property
+    def total_d2h_bytes(self) -> int:
+        return sum(c.d2h_bytes for c in self.per_channel)
+
+    @property
+    def total_reuse_bytes(self) -> int:
+        """H2d traffic avoided by cross-op operand residency — on a
+        resident-weights op this equals exactly the weight shard bytes."""
+        return sum(c.reuse_bytes for c in self.per_channel)
+
+    @property
+    def total_dedupe_bytes(self) -> int:
+        """H2d traffic avoided by within-op repeated-slice dedupe (charged
+        identically on fresh and resident paths)."""
+        return sum(c.dedupe_bytes for c in self.per_channel)
+
+    @property
     def flop_per_cycle(self) -> float:
-        """Effective throughput at makespan (the scaling headline)."""
-        return self.total_flops / self.makespan_cycles
+        """Effective throughput at makespan (the scaling headline).
+
+        0.0 for empty/degenerate ops — guarded like
+        :meth:`ChannelReport.utilization`, so fully-resident no-transfer
+        no-compute reports never divide by zero.
+        """
+        mk = self.makespan_cycles
+        return self.total_flops / mk if mk else 0.0
 
     @property
     def gflops(self) -> float:
@@ -139,12 +180,24 @@ class RuntimeReport:
                 f"{self.gflops:.1f}GFLOP/s "
                 f"util(min/mean/max)={min(us):.2f}/"
                 f"{sum(us) / len(us):.2f}/{max(us):.2f} "
-                f"bytes={self.total_bytes}")
+                f"bytes={self.total_bytes} reuse={self.total_reuse_bytes}")
 
 
 # ---------------------------------------------------------------------------
 # The runtime
 # ---------------------------------------------------------------------------
+
+
+def _unwrap(x: Operand, stack: PIMStack
+            ) -> Tuple[Optional[DeviceTensor], Optional[np.ndarray],
+                       Tuple[int, int]]:
+    """Split an operand into (handle, host values, shape)."""
+    if isinstance(x, DeviceTensor):
+        assert x.stack is stack, \
+            "DeviceTensor was placed on a different runtime's stack; " \
+            "residency does not transfer between stacks"
+        return x, x.values, x.shape
+    return None, x, tuple(x.shape)
 
 
 class PIMRuntime:
@@ -174,44 +227,133 @@ class PIMRuntime:
                 d2h_bytes=dev.xfer.d2h_bytes - b.d2h_bytes,
                 h2d_cycles=dev.xfer.h2d_cycles - b.h2d_cycles,
                 d2h_cycles=dev.xfer.d2h_cycles - b.d2h_cycles,
-                lead_in_cycles=lead_in.get(dev.channel_id, 0)))
+                lead_in_cycles=lead_in.get(dev.channel_id, 0),
+                reuse_bytes=dev.reuse_bytes - b.reuse_bytes,
+                dedupe_bytes=dev.dedupe_bytes - b.dedupe_bytes))
         return RuntimeReport(op=op, shape=shape, placement=placement,
                              channels=len(self.stack),
                              per_channel=tuple(reports))
 
+    def _ship_in(self, dev: PIMDevice, handle: Optional[DeviceTensor],
+                 box: Box, shipped: Dict[int, Set], role: str) -> bool:
+        """Charge one operand shard's h2d unless resident or already
+        shipped to this channel within the current op.  Returns whether
+        bytes actually moved (for the lead-in computation).
+
+        Misses on a handle transfer *and* mark resident, so repeated ops
+        converge to zero traffic; plain arrays dedupe only within the op
+        (the GEMV x-vector shipped once per channel, not once per K-split
+        shard).
+        """
+        nbytes = box_bytes(box)
+        if handle is not None:
+            if handle.is_resident(dev.channel_id, box):
+                dev.note_reuse(nbytes)
+                return False
+            dev.host_to_pim(nbytes)
+            handle.mark_resident(dev.channel_id, box)
+            return True
+        seen = shipped.setdefault(dev.channel_id, set())
+        key = (role, box)
+        if key in seen:
+            dev.note_dedupe(nbytes)
+            return False
+        dev.host_to_pim(nbytes)
+        seen.add(key)
+        return True
+
+    # -- operand placement (the residency entry point) -----------------------
+
+    def place(self, array, *, placement: str = "balanced", role: str = "A",
+              other_dim: int = 1) -> DeviceTensor:
+        """Upload an array's shards onto the stack; returns a resident
+        :class:`DeviceTensor` handle.
+
+        The placement decides the per-channel decomposition using the op
+        geometry the tensor will serve in: ``role="A"`` treats the array
+        as the (M, K) left/element-wise operand of ops with
+        ``N = other_dim`` (the resident-weights GEMV regime); ``role="B"``
+        as the (K, N) right operand with ``M = other_dim``.  The one-time
+        h2d is charged now, on each shard's channel; subsequent ops with a
+        matching placement geometry charge zero h2d for this operand.
+
+        Pass a ``(rows, cols)`` tuple instead of an array for an analytic
+        (shape-only) handle usable with ``execute=False`` sweeps.
+        """
+        if isinstance(array, tuple):
+            arr, shape = None, array
+        else:
+            arr = np.asarray(array, F16)
+            shape = arr.shape
+        assert len(shape) == 2, shape
+        handle = DeviceTensor(self.stack, shape, values=arr)
+        if role == "A":
+            m, k = shape
+            shards = get_placement(placement)(m, k, other_dim,
+                                              len(self.stack))
+            boxes = [(s.channel, s.a_box) for s in shards]
+        elif role == "B":
+            k, n = shape
+            shards = get_placement(placement)(other_dim, k, n,
+                                              len(self.stack))
+            boxes = [(s.channel, s.b_box) for s in shards]
+        else:
+            raise ValueError(f"role must be 'A' or 'B', got {role!r}")
+        for ch, box in boxes:
+            if handle.is_resident(ch, box):    # replicated shard geometry
+                continue
+            self.stack[ch].host_to_pim(box_bytes(box))
+            handle.mark_resident(ch, box)
+        return handle
+
     # -- GEMM / GEMV ---------------------------------------------------------
 
-    def gemm(self, a: jnp.ndarray, b: jnp.ndarray, *,
+    def gemm(self, a: Operand, b: Operand, *,
              placement: str = "row-striped",
-             execute: bool = True
-             ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
-        """C = A(m,k) @ B(k,n) partitioned across the stack's channels."""
-        m, k = a.shape
-        k2, n = b.shape
-        assert k == k2, (a.shape, b.shape)
+             execute: bool = True,
+             keep_output: bool = False
+             ) -> Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
+                        RuntimeReport]:
+        """C = A(m,k) @ B(k,n) partitioned across the stack's channels.
+
+        ``a``/``b`` may be host arrays or resident :class:`DeviceTensor`
+        handles.  With ``keep_output=True`` the result is returned as a
+        resident handle (exact-cover output shards stay on their channels;
+        K-split partials still drain for the host reduction) instead of a
+        host array.
+        """
+        ah, a_vals, (m, k) = _unwrap(a, self.stack)
+        bh, b_vals, (k2, n) = _unwrap(b, self.stack)
+        assert k == k2, ((m, k), (k2, n))
+        assert not execute or (a_vals is not None and b_vals is not None), \
+            "analytic (shape-only) DeviceTensor operands require " \
+            "execute=False"
         shards = get_placement(placement)(m, k, n, len(self.stack))
         validate_cover(shards, m, k, n)
 
         before = {d.channel_id: d.snapshot() for d in self.stack}
         lead_in: Dict[int, int] = {}
+        shipped: Dict[int, Set] = {}
         out = np.zeros((m, n), F16) if execute else None
+        out_handle = DeviceTensor(self.stack, (m, n), values=out,
+                                  copy=False) if keep_output else None
         partials: Dict[Tuple[int, int, int, int],
                        List[Tuple[int, np.ndarray]]] = {}
 
         for s in shards:
             dev = self.stack[s.channel]
+            a_ships = self._ship_in(dev, ah, s.a_box, shipped, "A")
+            b_ships = self._ship_in(dev, bh, s.b_box, shipped, "B")
             if s.channel not in lead_in:
                 i0, i1, j0, j1, c0, c1 = next(gemm_tiles(s.rows, s.ks, s.ns))
-                lead_in[s.channel] = transfer_cycles(
-                    ((i1 - i0) * (c1 - c0) + (c1 - c0) * (j1 - j0))
-                    * BYTES_PER_ELEM)
-            dev.host_to_pim(s.rows * s.ks * BYTES_PER_ELEM)   # A shard
-            dev.host_to_pim(s.ks * s.ns * BYTES_PER_ELEM)     # B shard
+                first = ((i1 - i0) * (c1 - c0) if a_ships else 0) \
+                    + ((c1 - c0) * (j1 - j0) if b_ships else 0)
+                lead_in[s.channel] = transfer_cycles(first * BYTES_PER_ELEM)
             if execute:
                 n_before = len(dev.engine.instrs)
                 sub = gemm_on_engine(dev.engine,
-                                     a[s.m0:s.m1, s.k0:s.k1],
-                                     b[s.k0:s.k1, s.n0:s.n1])
+                                     a_vals[s.m0:s.m1, s.k0:s.k1],
+                                     b_vals[s.k0:s.k1, s.n0:s.n1])
                 self._record_instrs(dev, n_before)
                 if s.is_partial(k):
                     partials.setdefault((s.m0, s.m1, s.n0, s.n1), []) \
@@ -225,7 +367,11 @@ class PIMRuntime:
                     dev.events.append(
                         ("instr",
                          InstrRecord("mac", i1 - i0, c1 - c0, j1 - j0)))
-            dev.pim_to_host(s.rows * s.ns * BYTES_PER_ELEM)   # C (or partial)
+            if keep_output and not s.is_partial(k):
+                out_handle.mark_resident(s.channel, s.out_box)
+                out_handle.pending_d2h.append((s.channel, s.out_box))
+            else:
+                dev.pim_to_host(s.rows * s.ns * BYTES_PER_ELEM)  # C / partial
 
         if execute:
             # host-side reduction of K-split partials, ascending-k FP16
@@ -236,52 +382,79 @@ class PIMRuntime:
                 out[m0:m1, n0:n1] = acc
 
         report = self._finish("gemm", (m, k, n), placement, before, lead_in)
+        if keep_output:
+            return out_handle, report
         return (jnp.asarray(out) if execute else None), report
 
-    def gemv(self, a: jnp.ndarray, x: jnp.ndarray, *,
+    def gemv(self, a: Operand, x: jnp.ndarray, *,
              placement: str = "row-striped",
              execute: bool = True
              ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
-        """y = A @ x (the MPC-Wrapper comparison workload), as N=1 GEMM."""
-        y, rep = self.gemm(a, x[:, None], placement=placement,
-                           execute=execute)
+        """y = A @ x (the MPC-Wrapper comparison workload), as N=1 GEMM.
+
+        ``a`` may be a resident handle (the serve-loop decode regime:
+        weights placed once, only the x vector moves per call); per-channel
+        x transfers are deduped across K-split shards that share a slice.
+        """
+        assert not isinstance(x, DeviceTensor), \
+            "gemv x must be a host vector; place A instead"
+        y, rep = self.gemm(a, np.asarray(x, F16)[:, None],
+                           placement=placement, execute=execute)
         rep = dataclasses.replace(rep, op="gemv")
         return (y[:, 0] if y is not None else None), rep
 
     # -- element-wise --------------------------------------------------------
 
-    def elementwise(self, kind: str, a: jnp.ndarray, b: jnp.ndarray, *,
+    def elementwise(self, kind: str, a: Operand, b: Operand, *,
                     placement: str = "row-striped",
-                    execute: bool = True
-                    ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
+                    execute: bool = True,
+                    keep_output: bool = False
+                    ) -> Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
+                               RuntimeReport]:
         """out = a <kind> b partitioned over the (M, C) output grid.
 
         Placements reuse the GEMM shard geometry with the column axis in
         the K slot and N=1; a K-split shard is just a column slab here, so
         every placement is an exact output partition (no reduction).
+
+        Operands may be resident handles — in particular the
+        ``keep_output`` handle of a previous GEMM/element-wise op on the
+        same placement, in which case the chained operand never touches
+        the host (epilogue fusion).  ``keep_output=True`` keeps this op's
+        result resident the same way.
         """
         assert kind in ("add", "sub", "mul")
-        assert a.shape == b.shape
-        m, c = a.shape
+        ah, a_vals, (m, c) = _unwrap(a, self.stack)
+        bh, b_vals, bshape = _unwrap(b, self.stack)
+        assert (m, c) == bshape, ((m, c), bshape)
+        assert not execute or (a_vals is not None and b_vals is not None), \
+            "analytic (shape-only) DeviceTensor operands require " \
+            "execute=False"
         shards = get_placement(placement)(m, c, 1, len(self.stack))
         validate_cover(shards, m, c, 1)
 
         before = {d.channel_id: d.snapshot() for d in self.stack}
         lead_in: Dict[int, int] = {}
+        shipped: Dict[int, Set] = {}
         out = np.zeros((m, c), F16) if execute else None
+        out_handle = DeviceTensor(self.stack, (m, c), values=out,
+                                  copy=False) if keep_output else None
 
         for s in shards:
             dev = self.stack[s.channel]
+            # both operands use the (m, col) footprint: C sits in the K slot
+            a_ships = self._ship_in(dev, ah, s.a_box, shipped, "A")
+            b_ships = self._ship_in(dev, bh, s.a_box, shipped, "B")
             if s.channel not in lead_in:
                 i0, i1, c0, c1 = next(ew_tiles(s.rows, s.ks))
-                lead_in[s.channel] = transfer_cycles(
-                    2 * (i1 - i0) * (c1 - c0) * BYTES_PER_ELEM)
-            dev.host_to_pim(2 * s.rows * s.ks * BYTES_PER_ELEM)  # both operands
+                first = (i1 - i0) * (c1 - c0) * \
+                    (int(a_ships) + int(b_ships))
+                lead_in[s.channel] = transfer_cycles(first * BYTES_PER_ELEM)
             if execute:
                 n_before = len(dev.engine.instrs)
                 sub = ew_on_engine(dev.engine, kind,
-                                   a[s.m0:s.m1, s.k0:s.k1],
-                                   b[s.m0:s.m1, s.k0:s.k1])
+                                   a_vals[s.m0:s.m1, s.k0:s.k1],
+                                   b_vals[s.m0:s.m1, s.k0:s.k1])
                 self._record_instrs(dev, n_before)
                 out[s.m0:s.m1, s.k0:s.k1] = sub
             else:
@@ -290,10 +463,16 @@ class PIMRuntime:
                     dev.charge_analytic(rep.cycles, rep.flops, rep.commands)
                     dev.events.append(
                         ("instr", InstrRecord(kind, i1 - i0, c1 - c0)))
-            dev.pim_to_host(s.rows * s.ks * BYTES_PER_ELEM)
+            if keep_output:
+                out_handle.mark_resident(s.channel, s.a_box)
+                out_handle.pending_d2h.append((s.channel, s.a_box))
+            else:
+                dev.pim_to_host(s.rows * s.ks * BYTES_PER_ELEM)
 
         report = self._finish(f"ew-{kind}", (m, c), placement, before,
                               lead_in)
+        if keep_output:
+            return out_handle, report
         return (jnp.asarray(out) if execute else None), report
 
 

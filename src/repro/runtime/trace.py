@@ -84,7 +84,9 @@ HEADER = """\
 # operands: (GRF, id) (SRF, id) (BANK, block address)
 # GRF 0-7 = GRF_A, GRF 8-15 = GRF_B; SRF 0-7 = SRF_A, SRF 8-15 = SRF_M
 # BANK 2a = even-bank block a, BANK 2a+1 = odd-bank block a
-# JUMP/EXIT are zero-command (predecoded) and do not appear."""
+# JUMP/EXIT are zero-command (predecoded) and do not appear.
+# "# RESIDENT [channel] [bytes]" marks an operand shard reused in place
+# (zero bus transactions); comment-shaped so external replay ignores it."""
 
 
 # ---------------------------------------------------------------------------
@@ -193,6 +195,11 @@ def emit_trace(stack: PIMStack) -> str:
         for kind, payload in dev.events:
             if kind in ("h2d", "d2h"):
                 lines.extend(_mem_lines(kind, dev.channel_id, payload))
+            elif kind == "reuse":
+                # resident operand consumed in place: no MEM transactions;
+                # comment-shaped so HBM-PIMulator replay skips it while our
+                # parser round-trips the avoided traffic
+                lines.append(f"# RESIDENT {dev.channel_id} {payload}")
             elif kind == "instr":
                 rec: InstrRecord = payload
                 if rec.kind == "mac":
@@ -232,6 +239,10 @@ class TraceStats:
         default_factory=collections.Counter)       # per channel
     mem_reads: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)       # per channel
+    resident_reuses: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per channel
+    resident_bytes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per channel
 
     @property
     def channels(self):
@@ -240,6 +251,7 @@ class TraceStats:
 
 
 _CHANNEL_RE = re.compile(r"^# channel (\d+)$")
+_RESIDENT_RE = re.compile(r"^# RESIDENT (\d+) (\d+)$")
 _MEM_RE = re.compile(r"^([RW]) MEM (\d+) (\d+) (\d+)$")
 _PIM_RE = re.compile(r"^PIM ([A-Z]+)((?: [A-Z]+,\d+)*)$")
 _CFR_RE = re.compile(r'^W CFR "(\d+)" ([A-Z]+)$')
@@ -256,6 +268,11 @@ def parse_trace(text: str) -> TraceStats:
         mm = _CHANNEL_RE.match(line)
         if mm:
             channel = int(mm.group(1))
+            continue
+        mm = _RESIDENT_RE.match(line)
+        if mm:
+            stats.resident_reuses[int(mm.group(1))] += 1
+            stats.resident_bytes[int(mm.group(1))] += int(mm.group(2))
             continue
         if line.startswith("#"):
             continue

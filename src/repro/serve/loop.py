@@ -5,6 +5,12 @@ the next queued request is prefilled into it.  Greedy sampling (argmax);
 the decode step is a single compiled function over the whole slot batch,
 caches donated in place — the production shape of vLLM-style serving,
 scaled to run on this host with reduced configs.
+
+Pass ``pim_offload=DecodeOffload(cfg, ...)`` to mirror every decode
+step's matmuls onto a resident-weight PIM runtime (balanced placement,
+weights uploaded once): the sidecar accumulates a per-step PIM-vs-host
+roofline without touching the numeric path — see
+:mod:`repro.serve.offload`.
 """
 from __future__ import annotations
 
@@ -18,6 +24,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as lm
+from repro.serve.offload import DecodeOffload
 
 
 @dataclasses.dataclass
@@ -33,12 +40,14 @@ class Request:
 
 class Server:
     def __init__(self, cfg: ArchConfig, params, slots: int = 4,
-                 cache_len: int = 128, eos_id: Optional[int] = None):
+                 cache_len: int = 128, eos_id: Optional[int] = None,
+                 pim_offload: Optional[DecodeOffload] = None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
         self.eos_id = eos_id
+        self.pim_offload = pim_offload
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = np.zeros((slots,), np.int32)
         self.caches = lm.make_caches(cfg, slots, cache_len)
@@ -91,6 +100,8 @@ class Server:
         logits, self.caches = self._decode(
             self.params, jnp.asarray(toks),
             jnp.asarray(self.pos), self.caches)
+        if self.pim_offload is not None:
+            self.pim_offload.step(len(live))
         nxt = np.asarray(jnp.argmax(logits, -1))
         for i in live:
             req = self.active[i]

@@ -1,0 +1,248 @@
+"""Decode-path PIM offload: resident-weight GEMV accounting for serving.
+
+The serve loop's decode step is GEMV-heavy (batch is small, weights are
+huge) — exactly the regime AMD's balanced-placement work targets and the
+regime where PrIM says host<->PIM transfer decides everything.  This
+module is the offload sidecar: it mirrors each decode step's matmuls onto
+a :class:`~repro.runtime.scheduler.PIMRuntime` whose weights were placed
+**once** as resident :class:`~repro.runtime.residency.DeviceTensor`
+handles (balanced placement), so the steady-state per-step h2d traffic is
+the activation vectors alone — weight re-transfer amortizes to zero after
+step 1.
+
+The sidecar is *accounting-only* by design: the numeric decode keeps
+running through XLA (weights are shape-only analytic handles, never
+materialized — full-scale configs stay placeable), while every step
+yields a :class:`StepRecord` combining the accumulated
+:class:`RuntimeReport`s into a PIM-vs-host roofline:
+
+    pim_s  = sum of per-op makespans / PIM_FREQ_HZ      (ops serialize)
+    host_s = max(flops / PEAK_FLOPS, bytes / HBM_BW)    (TPU v5e roofline)
+
+``dump`` writes the trajectory as ``results/dryrun/*.pim_offload.json``
+so future changes to the cost model have a BENCH baseline to diff.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+from repro.configs.base import ArchConfig
+from repro.core.isa import PIM_FREQ_HZ
+from repro.launch import hw
+from repro.runtime import BYTES_PER_ELEM, DeviceTensor, PIMRuntime
+
+F16 = np.float16
+
+
+# ---------------------------------------------------------------------------
+# The decode step's matmul set
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DecodeMatmul:
+    """One weight matmul of the decode step: y(out) = W(out, in) @ h(in).
+
+    ``count`` is the per-step multiplicity (layers; active experts)."""
+
+    name: str
+    out_dim: int
+    in_dim: int
+    count: int = 1
+
+    @property
+    def weight_bytes(self) -> int:
+        return self.out_dim * self.in_dim * BYTES_PER_ELEM * self.count
+
+
+def decode_matmuls(cfg: ArchConfig) -> List[DecodeMatmul]:
+    """The per-step weight matmuls of one decode token for ``cfg``.
+
+    Covers the decoder families the serve loop decodes (dense / vlm text
+    stack / moe); SSM and hybrid stacks mix scans with matmuls and are not
+    modeled yet.
+    """
+    if cfg.family not in ("dense", "vlm", "moe") or cfg.encoder_only:
+        raise ValueError(
+            f"decode offload models dense/moe decoder stacks, not "
+            f"{cfg.family!r}")
+    d, hd = cfg.d_model, cfg.head_dim_
+    L = cfg.n_layers
+    mm = [
+        DecodeMatmul("attn.wq", cfg.n_heads * hd, d, L),
+        DecodeMatmul("attn.wk", cfg.n_kv_heads * hd, d, L),
+        DecodeMatmul("attn.wv", cfg.n_kv_heads * hd, d, L),
+        DecodeMatmul("attn.wo", d, cfg.n_heads * hd, L),
+    ]
+    gated = cfg.act in ("swiglu", "geglu")
+    if cfg.moe is None:
+        mm += [DecodeMatmul("mlp.wi", cfg.d_ff, d, L)]
+        if gated:
+            mm += [DecodeMatmul("mlp.wg", cfg.d_ff, d, L)]
+        mm += [DecodeMatmul("mlp.wo", d, cfg.d_ff, L)]
+    else:
+        moe = cfg.moe
+        n_moe = L - moe.first_dense_layers
+        if moe.first_dense_layers:
+            mm += [DecodeMatmul("mlp.wi", cfg.d_ff, d,
+                                moe.first_dense_layers)]
+            if gated:
+                mm += [DecodeMatmul("mlp.wg", cfg.d_ff, d,
+                                    moe.first_dense_layers)]
+            mm += [DecodeMatmul("mlp.wo", d, cfg.d_ff,
+                                moe.first_dense_layers)]
+        # per token: router + top_k routed experts + shared experts
+        active = moe.top_k + moe.n_shared
+        mm += [DecodeMatmul("moe.router", moe.num_experts, d, n_moe)]
+        mm += [DecodeMatmul("moe.expert.wi", moe.d_ff_expert, d,
+                            n_moe * active)]
+        if gated:
+            mm += [DecodeMatmul("moe.expert.wg", moe.d_ff_expert, d,
+                                n_moe * active)]
+        mm += [DecodeMatmul("moe.expert.wo", d, moe.d_ff_expert,
+                            n_moe * active)]
+    mm += [DecodeMatmul("lm_head", cfg.vocab_padded, d, 1)]
+    return mm
+
+
+# ---------------------------------------------------------------------------
+# Per-step records and the offload sidecar
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class StepRecord:
+    """PIM-vs-host roofline of one decode step."""
+
+    step: int
+    batch: int
+    pim_cycles: float
+    pim_s: float
+    h2d_bytes: int              # host->PIM this step (activations at steady)
+    d2h_bytes: int
+    reuse_bytes: int            # weight traffic avoided by residency
+    flops: int
+    host_s: float               # TPU v5e roofline time for the same math
+    host_bound: str             # 'memory' | 'compute'
+
+    @property
+    def pim_vs_host(self) -> float:
+        """host_s / pim_s — >1 means PIM wins the roofline."""
+        return self.host_s / self.pim_s if self.pim_s else 0.0
+
+    def to_json(self) -> Dict:
+        d = dataclasses.asdict(self)
+        d["pim_vs_host"] = self.pim_vs_host
+        return d
+
+
+class DecodeOffload:
+    """Accounting sidecar: one serve loop's decode path on resident PIM.
+
+    Weights are placed once at construction (analytic, shape-only) with the
+    given placement; :meth:`step` replays one decode step's matmuls through
+    the runtime in cost mode and records the roofline.  Attach to a
+    :class:`repro.serve.loop.Server` via its ``pim_offload`` argument, or
+    drive it directly (the residency benchmark sweep does).
+    """
+
+    def __init__(self, cfg: ArchConfig, *, channels: int = 16,
+                 placement: str = "balanced"):
+        self.cfg = cfg
+        self.placement = placement
+        self.rt = PIMRuntime(channels=channels)
+        self.matmuls = decode_matmuls(cfg)
+        self.weights: List[Tuple[DecodeMatmul, List[DeviceTensor]]] = []
+        for m in self.matmuls:
+            handles = [self.rt.place((m.out_dim, m.in_dim),
+                                     placement=placement)
+                       for _ in range(m.count)]
+            self.weights.append((m, handles))
+        self.upload_bytes = sum(d.xfer.h2d_bytes for d in self.rt.stack)
+        self.steps: List[StepRecord] = []
+        self._act_cache: Dict[Tuple[int, int], np.ndarray] = {}
+
+    @property
+    def weight_bytes(self) -> int:
+        """FP16 bytes of all decode weights (the host-side HBM read/step)."""
+        return sum(m.weight_bytes for m in self.matmuls)
+
+    def step(self, batch: int) -> StepRecord:
+        """Account one decode step over ``batch`` live slots."""
+        before = {d.channel_id: d.snapshot() for d in self.rt.stack}
+        pim_cycles = 0.0
+        flops = 0
+        act_bytes = 0
+        for m, handles in self.weights:
+            # analytic gemms only read the shape; reuse one zeros buffer
+            # per (in_dim, batch) instead of allocating every step
+            key = (m.in_dim, batch)
+            x = self._act_cache.get(key)
+            if x is None:
+                x = self._act_cache[key] = np.zeros(key, F16)
+            for h in handles:
+                _, rep = self.rt.gemm(h, x, placement=self.placement,
+                                      execute=False)
+                pim_cycles += rep.makespan_cycles    # ops serialize per step
+                flops += rep.total_flops
+            act_bytes += m.in_dim * batch * BYTES_PER_ELEM * m.count
+        h2d = sum(d.xfer.h2d_bytes - before[d.channel_id].h2d_bytes
+                  for d in self.rt.stack)
+        d2h = sum(d.xfer.d2h_bytes - before[d.channel_id].d2h_bytes
+                  for d in self.rt.stack)
+        reuse = sum(d.reuse_bytes - before[d.channel_id].reuse_bytes
+                    for d in self.rt.stack)
+        host_bytes = self.weight_bytes + act_bytes
+        host_compute_s = flops / hw.PEAK_FLOPS
+        host_memory_s = host_bytes / hw.HBM_BW
+        rec = StepRecord(
+            step=len(self.steps) + 1, batch=batch,
+            pim_cycles=pim_cycles, pim_s=pim_cycles / PIM_FREQ_HZ,
+            h2d_bytes=h2d, d2h_bytes=d2h, reuse_bytes=reuse, flops=flops,
+            host_s=max(host_compute_s, host_memory_s),
+            host_bound=("compute" if host_compute_s > host_memory_s
+                        else "memory"))
+        self.steps.append(rec)
+        return rec
+
+    # -- reporting -----------------------------------------------------------
+
+    def roofline(self) -> Dict:
+        """Summary over accumulated steps: steady-state transfer breakdown
+        and the PIM-vs-host comparison.
+
+        "Steady state" is the latest *full-batch* step — the serve loop's
+        drain tail decodes with shrinking live batches, which would
+        under-report the steady activation traffic.
+        """
+        assert self.steps, "run at least one step first"
+        peak = max(s.batch for s in self.steps)
+        steady = [s for s in self.steps if s.batch == peak][-1]
+        return {
+            "arch": self.cfg.name,
+            "channels": len(self.rt.stack),
+            "placement": self.placement,
+            "matmuls_per_step": sum(m.count for m in self.matmuls),
+            "weight_bytes": self.weight_bytes,
+            "upload_bytes": self.upload_bytes,
+            "steady_h2d_bytes": steady.h2d_bytes,
+            "steady_d2h_bytes": steady.d2h_bytes,
+            "steady_reuse_bytes": steady.reuse_bytes,
+            "steady_pim_s": steady.pim_s,
+            "steady_host_s": steady.host_s,
+            "steady_host_bound": steady.host_bound,
+            "steady_pim_vs_host": steady.pim_vs_host,
+            "steps": [s.to_json() for s in self.steps],
+        }
+
+    def dump(self, path: str) -> Dict:
+        """Write the roofline trajectory as JSON (the BENCH artifact)."""
+        rec = self.roofline()
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, sort_keys=True)
+            f.write("\n")
+        return rec

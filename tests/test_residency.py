@@ -1,0 +1,409 @@
+"""Operand-residency tests: resident-handle bit-exactness vs the
+fresh-transfer path, ledger invariants (reuse charges zero h2d), trace
+round-trips of resident-reuse events, gemv vector-transfer dedupe, output
+residency / epilogue fusion, and the serve decode offload."""
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.runtime import (
+    DeviceTensor,
+    ChannelReport,
+    PIMRuntime,
+    PLACEMENTS,
+    RuntimeReport,
+    pim_gemv,
+)
+from repro.runtime.trace import emit_trace, parse_trace
+from repro.serve.offload import DecodeOffload, decode_matmuls
+
+RNG = np.random.default_rng(11)
+
+
+def rand(*shape, scale=0.15):
+    return (RNG.standard_normal(shape) * scale).astype(np.float16)
+
+
+# ---------------------------------------------------------------------------
+# bit-exactness: resident handles never change numerics
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("placement", sorted(PLACEMENTS))
+@pytest.mark.parametrize("channels", [1, 4, 16])
+def test_resident_gemv_bit_exact_all_placements(placement, channels):
+    a, x = rand(256, 512), rand(512)
+    y_fresh, _ = pim_gemv(a, x, channels=channels, placement=placement)
+    rt = PIMRuntime(channels=channels)
+    w = rt.place(a, placement=placement)
+    for _ in range(2):                       # first use and steady state
+        y_res, _ = rt.gemv(w, x, placement=placement)
+        np.testing.assert_array_equal(np.asarray(y_fresh),
+                                      np.asarray(y_res))
+
+
+@pytest.mark.parametrize("placement", sorted(PLACEMENTS))
+def test_resident_gemm_and_elementwise_bit_exact(placement):
+    a, b = rand(384, 160), rand(160, 96)
+    c, d = rand(384, 160), rand(384, 160)
+    fresh = PIMRuntime(channels=4)
+    res = PIMRuntime(channels=4)
+    wa = res.place(a, placement=placement, other_dim=96)
+    out_f, _ = fresh.gemm(a, b, placement=placement)
+    out_r, _ = res.gemm(wa, b, placement=placement)
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_r))
+    wc = res.place(c, placement=placement)
+    ew_f, _ = fresh.elementwise("mul", c, d, placement=placement)
+    ew_r, _ = res.elementwise("mul", wc, d, placement=placement)
+    np.testing.assert_array_equal(np.asarray(ew_f), np.asarray(ew_r))
+
+
+# ---------------------------------------------------------------------------
+# ledger invariants
+# ---------------------------------------------------------------------------
+
+
+def test_resident_reuse_charges_zero_h2d():
+    a, x = rand(512, 1024), rand(1024)
+    rt = PIMRuntime(channels=4)
+    w = rt.place(a, placement="balanced")
+    upload = sum(dev.xfer.h2d_bytes for dev in rt.stack)
+    assert upload == a.size * 2               # the one-time weight upload
+    _, rep1 = rt.gemv(w, x, placement="balanced")
+    _, rep2 = rt.gemv(w, x, placement="balanced")
+    for rep in (rep1, rep2):
+        # steady state: only the x slices move; residency reuse is exactly
+        # the weight bytes (within-op x dedupe is accounted separately)
+        assert rep.total_h2d_bytes < a.size * 2
+        assert rep.total_reuse_bytes == a.size * 2
+    assert rep1.total_h2d_bytes == rep2.total_h2d_bytes
+    # the device ledgers saw no weight re-transfer after placement
+    assert sum(dev.xfer.h2d_bytes for dev in rt.stack) \
+        == upload + rep1.total_h2d_bytes + rep2.total_h2d_bytes
+
+
+def test_resident_h2d_drop_matches_reuse():
+    """Fresh h2d - resident h2d == residency reuse, at every channel
+    count; within-op x dedupe is identical on both paths."""
+    a, x = rand(256, 768), rand(768)
+    for ch in (1, 4, 16):
+        fresh, res = PIMRuntime(channels=ch), PIMRuntime(channels=ch)
+        w = res.place(a, placement="balanced")
+        _, rf = fresh.gemv(a, x, placement="balanced")
+        _, rr = res.gemv(w, x, placement="balanced")
+        assert rf.total_h2d_bytes - rr.total_h2d_bytes \
+            == rr.total_reuse_bytes
+        assert rf.total_reuse_bytes == 0
+        assert rr.total_dedupe_bytes == rf.total_dedupe_bytes
+        assert rr.total_d2h_bytes == rf.total_d2h_bytes
+
+
+def test_lazy_miss_becomes_resident():
+    """A handle used without place() ships once, then reuses."""
+    a, x = rand(256, 256), rand(256)
+    rt = PIMRuntime(channels=2)
+    w = DeviceTensor(rt.stack, a.shape, values=a)
+    _, rep1 = rt.gemv(w, x, placement="row-striped")
+    _, rep2 = rt.gemv(w, x, placement="row-striped")
+    assert rep1.total_h2d_bytes == a.size * 2 + 2 * x.size * 2  # both chans
+    assert rep2.total_h2d_bytes == 2 * x.size * 2               # x only
+    assert rep2.total_reuse_bytes == a.size * 2
+
+
+def test_analytic_and_numeric_residency_charge_identical_ledgers():
+    a, x = rand(384, 512), rand(512)
+    rep_by_mode = {}
+    for execute in (True, False):
+        rt = PIMRuntime(channels=4)
+        w = rt.place(a if execute else tuple(a.shape), placement="balanced")
+        rt.gemv(w, x, placement="balanced", execute=execute)
+        _, rep = rt.gemv(w, x, placement="balanced", execute=execute)
+        rep_by_mode[execute] = rep
+    for cx, ca in zip(rep_by_mode[True].per_channel,
+                      rep_by_mode[False].per_channel):
+        assert cx.h2d_bytes == ca.h2d_bytes
+        assert cx.reuse_bytes == ca.reuse_bytes
+        assert cx.dedupe_bytes == ca.dedupe_bytes
+        assert cx.compute_cycles == ca.compute_cycles
+    assert rep_by_mode[True].makespan_cycles \
+        == rep_by_mode[False].makespan_cycles
+
+
+def test_analytic_handle_rejects_numeric_execution():
+    rt = PIMRuntime(channels=2)
+    w = rt.place((128, 128), placement="row-striped")
+    with pytest.raises(AssertionError):
+        rt.gemv(w, rand(128), placement="row-striped")
+
+
+def test_place_snapshots_values_against_host_mutation():
+    """Resident data cannot change without a transfer: mutating the
+    source array after place() must not leak into the device copy."""
+    a, x = rand(128, 128), rand(128)
+    rt = PIMRuntime(channels=2)
+    w = rt.place(a, placement="row-striped")
+    expected, _ = PIMRuntime(channels=2).gemv(a, x, placement="row-striped")
+    a *= 2                                    # host-side mutation
+    y, rep = rt.gemv(w, x, placement="row-striped")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(expected))
+    assert rep.total_reuse_bytes == a.size * 2
+
+
+def test_evict_drops_residency_and_forces_retransfer():
+    a, x = rand(256, 256), rand(256)
+    rt = PIMRuntime(channels=2)
+    w = rt.place(a, placement="row-striped")
+    assert rt.stack.resident_bytes == a.size * 2
+    w.evict()
+    assert rt.stack.resident_bytes == 0
+    _, rep = rt.gemv(w, x, placement="row-striped")
+    assert rep.total_h2d_bytes == a.size * 2 + 2 * x.size * 2
+
+
+def test_handle_rejects_foreign_runtime():
+    """A handle placed on one runtime must not claim residency (or crash
+    on channel-count mismatch) on another."""
+    a, x = rand(128, 128), rand(128)
+    rt_a = PIMRuntime(channels=4)
+    w = rt_a.place(a, placement="row-striped")
+    for ch in (4, 16):
+        with pytest.raises(AssertionError):
+            PIMRuntime(channels=ch).gemv(w, x, placement="row-striped")
+
+
+def test_place_role_b():
+    a, b = rand(256, 128), rand(128, 64)
+    rt = PIMRuntime(channels=4)
+    wb = rt.place(b, placement="row-striped", role="B", other_dim=256)
+    out_r, rep = rt.gemm(a, wb, placement="row-striped")
+    out_f, _ = PIMRuntime(channels=4).gemm(a, b, placement="row-striped")
+    np.testing.assert_array_equal(np.asarray(out_f), np.asarray(out_r))
+    assert rep.total_reuse_bytes > 0          # B shards were resident
+
+
+# ---------------------------------------------------------------------------
+# gemv x-vector dedupe (plain arrays, within one op)
+# ---------------------------------------------------------------------------
+
+
+def test_gemv_vector_transfer_deduped_per_channel():
+    """Balanced LPT puts several row blocks on one channel; the dense x
+    vector must ship once per channel, not once per shard."""
+    m, k, ch = 2048, 256, 4                   # 16 row blocks on 4 channels
+    a, x = rand(m, k), rand(k)
+    _, rep = pim_gemv(a, x, channels=ch, placement="balanced")
+    # per channel: its A rows once + x exactly once
+    for c in rep.per_channel:
+        a_bytes = c.h2d_bytes - k * 2
+        assert a_bytes % (k * 2) == 0         # whole row blocks
+        assert c.dedupe_bytes > 0             # the deduped x re-ships
+        assert c.reuse_bytes == 0             # no handles in play
+    total_a = sum(c.h2d_bytes - k * 2 for c in rep.per_channel)
+    assert total_a == m * k * 2
+
+
+def test_gemv_dedupe_preserves_numerics_and_d2h():
+    a, x = rand(2048, 256), rand(256)
+    ref = a.astype(np.float32) @ x.astype(np.float32)
+    y, rep = pim_gemv(a, x, channels=4, placement="balanced")
+    np.testing.assert_allclose(np.asarray(y, np.float32), ref,
+                               atol=0.05, rtol=0.05)
+    assert rep.total_d2h_bytes == 2048 * 2    # one fp16 y element per row
+
+
+# ---------------------------------------------------------------------------
+# output residency / epilogue fusion
+# ---------------------------------------------------------------------------
+
+
+def test_gemm_keep_output_defers_d2h_to_host_fetch():
+    a, b = rand(256, 128), rand(128, 64)
+    rt = PIMRuntime(channels=2)
+    h, rep = rt.gemm(a, b, placement="row-striped", keep_output=True)
+    assert isinstance(h, DeviceTensor)
+    assert rep.total_d2h_bytes == 0
+    before = sum(d.xfer.d2h_bytes for d in rt.stack)
+    out = h.to_host()
+    drained = sum(d.xfer.d2h_bytes for d in rt.stack) - before
+    assert drained == 256 * 64 * 2
+    ref, _ = PIMRuntime(channels=2).gemm(a, b, placement="row-striped")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    assert h.to_host() is not None            # second fetch charges nothing
+    assert sum(d.xfer.d2h_bytes for d in rt.stack) - before == drained
+
+
+def test_gemm_elementwise_epilogue_chains_resident():
+    """GEMM -> add epilogue: the intermediate never crosses the host."""
+    a, b = rand(256, 128), rand(128, 64)
+    c = rand(256, 64)
+    rt = PIMRuntime(channels=2)
+    h, rep_g = rt.gemm(a, b, placement="row-striped", keep_output=True)
+    out, rep_e = rt.elementwise("add", h, c, placement="row-striped")
+    assert rep_g.total_d2h_bytes == 0
+    assert rep_e.total_h2d_bytes == c.size * 2      # only the epilogue term
+    assert rep_e.total_reuse_bytes == 256 * 64 * 2  # intermediate reused
+    fresh = PIMRuntime(channels=2)
+    g, _ = fresh.gemm(a, b, placement="row-striped")
+    ref, _ = fresh.elementwise("add", g, c, placement="row-striped")
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_elementwise_chain_keeps_intermediates_resident():
+    """add -> mul -> sub chain: only the fresh operand of each op moves."""
+    xs = [rand(256, 192) for _ in range(4)]
+    rt = PIMRuntime(channels=4)
+    h, rep = rt.elementwise("add", xs[0], xs[1], placement="row-striped",
+                            keep_output=True)
+    assert rep.total_d2h_bytes == 0
+    for kind, nxt in (("mul", xs[2]), ("sub", xs[3])):
+        h, rep = rt.elementwise(kind, h, nxt, placement="row-striped",
+                                keep_output=True)
+        assert rep.total_h2d_bytes == nxt.size * 2
+        assert rep.total_reuse_bytes == nxt.size * 2
+        assert rep.total_d2h_bytes == 0
+    ref = (((xs[0] + xs[1]).astype(np.float16) * xs[2]).astype(np.float16)
+           - xs[3]).astype(np.float16)
+    np.testing.assert_array_equal(np.asarray(h.to_host()), ref)
+
+
+def test_partial_shards_always_drain_under_keep_output():
+    """K-split partials must round-trip for the host reduction even when
+    the output is kept resident."""
+    a, b = rand(128, 1024), rand(1024, 8)     # 1 row block, 16ch -> K-split
+    rt = PIMRuntime(channels=16)
+    h, rep = rt.gemm(a, b, placement="balanced", keep_output=True)
+    assert rep.total_d2h_bytes > 0            # the partials
+    ref, _ = PIMRuntime(channels=16).gemm(a, b, placement="balanced")
+    np.testing.assert_array_equal(np.asarray(h.to_host()), np.asarray(ref))
+
+
+# ---------------------------------------------------------------------------
+# trace round-trip of resident-reuse events
+# ---------------------------------------------------------------------------
+
+
+def test_trace_roundtrips_resident_reuse_events():
+    a, x = rand(256, 256), rand(256)
+    rt = PIMRuntime(channels=2)
+    w = rt.place(a, placement="row-striped")
+    _, rep = rt.gemv(w, x, placement="row-striped")
+    stats = parse_trace(emit_trace(rt.stack))
+    # reuse shows up per channel with the avoided bytes, zero MEM lines
+    # (the trace marker covers residency reuse and within-op dedupe)
+    for c in rep.per_channel:
+        assert stats.resident_bytes[c.channel] \
+            == c.reuse_bytes + c.dedupe_bytes
+        assert stats.resident_reuses[c.channel] == 1     # one A shard each
+        # MEM writes = place upload + x slice, nothing for the reuse
+        assert stats.mem_writes[c.channel] * 32 >= c.h2d_bytes
+    assert sum(stats.resident_bytes.values()) == rep.total_reuse_bytes
+    # the trace still parses as strict HBM-PIMulator grammar otherwise
+    assert stats.pim_commands == rep.total_commands
+
+
+def test_trace_reuse_lines_are_comment_shaped():
+    """External replay tools must be able to ignore reuse markers."""
+    rt = PIMRuntime(channels=1)
+    w = rt.place(rand(128, 64), placement="row-striped")
+    rt.gemv(w, rand(64), placement="row-striped")
+    text = emit_trace(rt.stack)
+    reuse_lines = [ln for ln in text.splitlines()
+                   if ln.startswith("# RESIDENT")]
+    assert reuse_lines and all(ln.startswith("#") for ln in reuse_lines)
+
+
+# ---------------------------------------------------------------------------
+# RuntimeReport degenerate-op guard
+# ---------------------------------------------------------------------------
+
+
+def test_flop_per_cycle_zero_makespan_guard():
+    empty = RuntimeReport(op="gemm", shape=(0,), placement="row-striped",
+                          channels=1, per_channel=())
+    assert empty.makespan_cycles == 0.0
+    assert empty.flop_per_cycle == 0.0        # used to ZeroDivisionError
+    assert empty.gflops == 0.0
+    idle = RuntimeReport(
+        op="gemm", shape=(0,), placement="row-striped", channels=1,
+        per_channel=(ChannelReport(
+            channel=0, compute_cycles=0, flops=0, commands=0, h2d_bytes=0,
+            d2h_bytes=0, h2d_cycles=0, d2h_cycles=0, lead_in_cycles=0),))
+    assert idle.flop_per_cycle == 0.0
+    assert idle.gflops == 0.0
+
+
+# ---------------------------------------------------------------------------
+# serve decode offload
+# ---------------------------------------------------------------------------
+
+
+def test_decode_offload_steady_state_activations_only():
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=16, placement="balanced")
+    assert off.upload_bytes == off.weight_bytes
+    recs = [off.step(4) for _ in range(3)]
+    for rec in recs:
+        assert rec.reuse_bytes == off.weight_bytes   # full amortization
+        assert rec.h2d_bytes == recs[0].h2d_bytes    # activations, constant
+        assert rec.h2d_bytes < off.weight_bytes
+        assert rec.pim_s > 0 and rec.host_s > 0
+
+
+def test_decode_offload_batch_scales_activations_not_weights():
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=8)
+    r1, r4 = off.step(1), off.step(4)
+    assert r4.h2d_bytes > r1.h2d_bytes           # more activation traffic
+    assert r4.reuse_bytes == r1.reuse_bytes      # same resident weights
+    assert r4.flops == 4 * r1.flops
+
+
+def test_decode_offload_reuse_exact_at_one_channel():
+    """Regression: with 1 channel, balanced LPT puts several full-K row
+    blocks on the same channel, whose deduped x slices must NOT inflate
+    the residency-reuse == weight-bytes invariant."""
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=1)
+    rec = off.step(2)
+    assert rec.reuse_bytes == off.weight_bytes
+
+
+def test_decode_offload_roofline_skips_drain_tail():
+    """The steady-state summary must come from the latest full-batch step,
+    not the shrunken drain-tail batch."""
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=4)
+    full = off.step(4)
+    off.step(1)                                # drain tail
+    roof = off.roofline()
+    assert roof["steady_h2d_bytes"] == full.h2d_bytes
+    assert len(roof["steps"]) == 2
+
+
+def test_decode_offload_dump_artifact(tmp_path):
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=4)
+    off.step(2)
+    p = tmp_path / "x.pim_offload.json"
+    rec = off.dump(str(p))
+    loaded = json.loads(p.read_text())
+    assert loaded["steady_h2d_bytes"] == rec["steady_h2d_bytes"]
+    assert loaded["arch"] == cfg.name
+    assert len(loaded["steps"]) == 1
+
+
+def test_decode_offload_rejects_unmodeled_families():
+    with pytest.raises(ValueError):
+        decode_matmuls(get("mamba2-370m").reduced())
+
+
+def test_decode_offload_moe_counts_active_experts():
+    cfg = get("mixtral-8x22b").reduced()
+    mms = {m.name: m for m in decode_matmuls(cfg)}
+    moe = cfg.moe
+    n_moe = cfg.n_layers - moe.first_dense_layers
+    assert mms["moe.expert.wi"].count \
+        == n_moe * (moe.top_k + moe.n_shared)
+    assert mms["moe.router"].count == n_moe

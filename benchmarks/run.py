@@ -1,22 +1,33 @@
 """Benchmark driver.  One section per paper table/figure, the device-runtime
 multi-pseudo-channel scaling sweep (``channels``), the operand-residency /
 serve-offload sweep (``residency`` — also writes the
-``results/dryrun/*.pim_offload.json`` BENCH artifact), the roofline summary
-(from dry-run artifacts, if present), and kernel micro-checks.
+``results/dryrun/*.pim_offload.json`` BENCH artifact), the fast-path
+microbench (``engine``), the roofline summary (from dry-run artifacts, if
+present), and kernel micro-checks.
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV and writes
+``results/BENCH_runtime.json`` — harness wall-clock per section plus the
+``engine`` section's measured fast-vs-reference numbers — so the perf
+trajectory of the harness itself is tracked across PRs (CI's
+``bench-engine`` job gates on it).
 
   PYTHONPATH=src python -m benchmarks.run            # everything
   PYTHONPATH=src python -m benchmarks.run fig8       # one section
   PYTHONPATH=src python -m benchmarks.run channels   # scaling sweep
   PYTHONPATH=src python -m benchmarks.run residency  # resident operands
+  PYTHONPATH=src python -m benchmarks.run engine     # fast-path gates
 """
 from __future__ import annotations
 
+import json
 import sys
 import time
+from pathlib import Path
 
 import numpy as np
+
+BENCH_RUNTIME = Path(__file__).resolve().parents[1] / "results" \
+    / "BENCH_runtime.json"
 
 
 def kernel_microbench():
@@ -60,6 +71,36 @@ def roofline_summary():
         return [("roofline/error", 0.0, str(e)[:120])]
 
 
+def write_bench_runtime(section_s: dict) -> None:
+    """Update the BENCH_runtime.json artifact: harness wall-clock per
+    section + the engine section's fast-path measurements (if it ran).
+
+    Merges into the existing file so a partial run (e.g. ``run fig8``)
+    refreshes only its own sections and never wipes the engine metrics
+    the artifact exists to track across PRs.
+    """
+    from benchmarks.paper_figures import LAST_ENGINE_METRICS
+    BENCH_RUNTIME.parent.mkdir(parents=True, exist_ok=True)
+    rec = {"generated_by": "benchmarks.run", "section_wall_s": {},
+           "engine": {}}
+    if BENCH_RUNTIME.exists():
+        try:
+            prev = json.load(open(BENCH_RUNTIME))
+            rec["section_wall_s"] = prev.get("section_wall_s", {})
+            rec["engine"] = prev.get("engine", {})
+        except (OSError, ValueError):
+            pass
+    rec["section_wall_s"].update(
+        {k: round(v, 4) for k, v in section_s.items()})
+    # merge (never replace): a partially-failed engine section must not
+    # wipe previously recorded trajectory keys
+    rec["engine"].update({k: round(v, 6)
+                          for k, v in LAST_ENGINE_METRICS.items()})
+    with open(BENCH_RUNTIME, "w") as f:
+        json.dump(rec, f, indent=1, sort_keys=True)
+        f.write("\n")
+
+
 def main() -> None:
     from benchmarks.paper_figures import ALL
     sections = dict(ALL)
@@ -74,13 +115,17 @@ def main() -> None:
         sys.exit(2)
     print("name,us_per_call,derived")
     failures = 0
+    section_s: dict = {}
     for key in wanted:
+        t0 = time.perf_counter()
         try:
             for name, us, derived in sections[key]():
                 print(f"{name},{us:.1f},{derived}")
         except AssertionError as e:
             failures += 1
             print(f"{key}/FAILED,0,{e}")
+        section_s[key] = time.perf_counter() - t0
+    write_bench_runtime(section_s)
     if failures:
         sys.exit(1)
 

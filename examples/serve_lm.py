@@ -7,8 +7,14 @@ matmuls are accounted on a 16-pseudo-channel stack and the run ends with
 the steady-state PIM-vs-host roofline — weights amortized, h2d traffic
 is activations only.
 
+With ``--pim-numeric`` the sidecar also *executes* each step's matmul
+set on the per-channel engines (weights materialized and resident) and
+cross-checks every output — lm_head logits included — against an XLA
+reference within FP16 accumulation tolerance.
+
   PYTHONPATH=src python examples/serve_lm.py [--requests 12] [--slots 4]
   PYTHONPATH=src python examples/serve_lm.py --pim-offload
+  PYTHONPATH=src python examples/serve_lm.py --pim-offload --pim-numeric
 """
 import argparse
 import time
@@ -31,13 +37,17 @@ def main():
                     help="account decode matmuls on a resident-weight "
                          "PIM runtime and report the roofline")
     ap.add_argument("--pim-channels", type=int, default=16)
+    ap.add_argument("--pim-numeric", action="store_true",
+                    help="run the offloaded matmuls numerically on the "
+                         "per-channel engines, cross-checked against XLA")
     args = ap.parse_args()
 
     cfg = get("qwen3-1.7b").reduced().replace(n_layers=4, d_model=256,
                                               d_ff=512, vocab_size=1024)
     params = lm.init(cfg, jax.random.PRNGKey(0))
-    offload = DecodeOffload(cfg, channels=args.pim_channels) \
-        if args.pim_offload else None
+    offload = DecodeOffload(cfg, channels=args.pim_channels,
+                            numeric=args.pim_numeric) \
+        if args.pim_offload or args.pim_numeric else None
     srv = Server(cfg, params, slots=args.slots, cache_len=160,
                  pim_offload=offload)
 
@@ -68,6 +78,12 @@ def main():
               f"h2d={roof['steady_h2d_bytes']}B (activations only), "
               f"d2h={roof['steady_d2h_bytes']}B, "
               f"weight reuse={roof['steady_reuse_bytes']}B/step")
+        if args.pim_numeric:
+            err = max(s.numeric_max_err for s in offload.steps)
+            lerr = max(s.logits_max_err for s in offload.steps)
+            print(f"  numeric decode-on-PIM: every matmul executed on the "
+                  f"engines and matched XLA (max err={err:.1e}, "
+                  f"lm_head logits err={lerr:.1e})")
         print(f"  roofline: pim={roof['steady_pim_s']:.2e}s vs "
               f"host={roof['steady_host_s']:.2e}s "
               f"({roof['steady_host_bound']}-bound host), "

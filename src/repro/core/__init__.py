@@ -23,15 +23,20 @@ from repro.core.isa import (
 from repro.core.engine import (
     AMEEngine,
     InstrRecord,
+    ShardSpan,
     TileHandle,
     ew_on_engine,
+    ew_on_engine_batched,
     ew_tiles,
     gemm_on_engine,
+    gemm_on_engine_batched,
     gemm_tiles,
 )
 from repro.core.cost import (
     PEPCostReport,
     elementwise_cost,
+    ew_shard_cost,
+    gemm_shard_cost,
     max_tile_mfmacc,
     mfmacc_cost,
     saturated_flop_per_cycle,
@@ -40,8 +45,9 @@ from repro.core.cost import (
 __all__ = [
     "AMECSRState", "AMEOp", "AME_TO_PIM", "PIMInstr", "PIMOpcode",
     "ROWNUM", "TILE_MAX_COLS", "THEORETICAL_PEAK_FLOP_PER_CYCLE",
-    "UnsupportedOnPIM", "AMEEngine", "InstrRecord", "TileHandle",
-    "ew_on_engine", "ew_tiles", "gemm_on_engine", "gemm_tiles",
-    "PEPCostReport", "elementwise_cost", "max_tile_mfmacc", "mfmacc_cost",
-    "saturated_flop_per_cycle",
+    "UnsupportedOnPIM", "AMEEngine", "InstrRecord", "ShardSpan",
+    "TileHandle", "ew_on_engine", "ew_on_engine_batched", "ew_tiles",
+    "gemm_on_engine", "gemm_on_engine_batched", "gemm_tiles",
+    "PEPCostReport", "elementwise_cost", "ew_shard_cost", "gemm_shard_cost",
+    "max_tile_mfmacc", "mfmacc_cost", "saturated_flop_per_cycle",
 ]

@@ -34,7 +34,9 @@ from repro.core.isa import (
     AAM_BLOCKS,
     JUMP_MAX_ITERS,
     PIM_FREQ_HZ,
+    ROWNUM,
     THEORETICAL_PEAK_FLOP_PER_CYCLE,
+    TILE_MAX_COLS,
 )
 from repro.core.pep import (
     COMMANDS_PER_PASS,
@@ -110,6 +112,79 @@ def mfmacc_cost(m: int, k: int, n: int, eta: float = ETA_BUS) -> PEPCostReport:
     passes = sum(i.passes for i in invs)
     flops = 2 * m * k * n
     return _report("mac", len(invs), passes, flops, eta=eta)
+
+
+# ---------------------------------------------------------------------------
+# Closed-form whole-shard costs (the analytic fast path)
+#
+# The runtime's blocked walk tiles a shard (rows, ks, ns) into <=128 x 4096
+# (x <=128) engine tiles; each axis takes at most TWO distinct tile sizes
+# (the full block and one ragged edge), so the whole walk collapses to <=8
+# tile classes.  Per class the per-tile cost is computed once and scaled by
+# the class count — O(1) per shard instead of O(#tiles).
+#
+# Exactness: every per-tile ``cycles`` is a multiple of 0.5 (commands and
+# setup are integers, passes * ETA_BUS a half-integer), so count * cycles
+# and the class sums are exact in binary floating point — the closed form
+# equals the generator walk's running sum bit-for-bit, which the test
+# suite asserts with ``==`` across ragged shapes.
+# ---------------------------------------------------------------------------
+
+
+def _axis_classes(size: int, block: int):
+    """Tile sizes along one blocked axis as [(tile_size, count)] — the full
+    block plus at most one ragged edge."""
+    full, rem = divmod(size, block)
+    out = []
+    if full:
+        out.append((block, full))
+    if rem:
+        out.append((rem, 1))
+    return out
+
+
+def _scale(rep: PEPCostReport, count: int) -> PEPCostReport:
+    return PEPCostReport(kind=rep.kind, launches=rep.launches * count,
+                         passes=rep.passes * count,
+                         commands=rep.commands * count,
+                         cycles=rep.cycles * count, flops=rep.flops * count)
+
+
+def _merge(kind: str, parts) -> PEPCostReport:
+    return PEPCostReport(kind=kind,
+                         launches=sum(p.launches for p in parts),
+                         passes=sum(p.passes for p in parts),
+                         commands=sum(p.commands for p in parts),
+                         cycles=sum(p.cycles for p in parts),
+                         flops=sum(p.flops for p in parts))
+
+
+def gemm_shard_cost(rows: int, ks: int, ns: int,
+                    eta: float = ETA_BUS) -> PEPCostReport:
+    """Total cost of the blocked-GEMM walk over a (rows, ks, ns) shard.
+
+    Equals ``sum(mfmacc_cost(tile) for tile in gemm_tiles(rows, ks, ns))``
+    exactly, without walking the tiles.
+    """
+    parts = []
+    for msz, mc in _axis_classes(rows, ROWNUM):
+        for ksz, kc in _axis_classes(ks, TILE_MAX_COLS):
+            for nsz, nc in _axis_classes(ns, ROWNUM):
+                parts.append(_scale(mfmacc_cost(msz, ksz, nsz, eta=eta),
+                                    mc * kc * nc))
+    return _merge("mac", parts)
+
+
+def ew_shard_cost(kind: str, rows: int, cols: int,
+                  eta: float = ETA_BUS) -> PEPCostReport:
+    """Total cost of the blocked element-wise walk over a (rows, cols)
+    shard; equals the per-tile sum over ``ew_tiles(rows, cols)`` exactly."""
+    parts = []
+    for msz, mc in _axis_classes(rows, ROWNUM):
+        for csz, cc in _axis_classes(cols, TILE_MAX_COLS):
+            parts.append(_scale(elementwise_cost(kind, msz, csz, eta=eta),
+                                mc * cc))
+    return _merge(kind, parts)
 
 
 def max_tile_mfmacc() -> PEPCostReport:

@@ -78,7 +78,7 @@ def _mac_outer(acc, a, b):
                + col[:, None] * row[None, :]).astype(F16)
         return out, None
 
-    out, _ = jax.lax.scan(step, acc.astype(F16), (a.T, b))
+    out, _ = jax.lax.scan(step, acc.astype(F16), (a.T, b), unroll=4)
     return out
 
 
@@ -133,6 +133,37 @@ class InstrRecord:
     n: int = 1
 
 
+@dataclasses.dataclass(frozen=True)
+class ShardSpan:
+    """Aggregated record of one whole-shard batched/analytic execution.
+
+    The fast paths charge a shard's cost in one step instead of walking
+    tiles, so the instruction stream holds one span per shard; the trace
+    emitter expands it back into the identical per-tile
+    :class:`InstrRecord` sequence via :meth:`records` — command traces are
+    byte-for-byte the same as the per-tile walk's.
+
+    ``kind`` is ``"mac"`` (``cols`` = K extent, ``ns`` = N extent) or an
+    element-wise kind (``cols`` = column extent, ``ns`` unused).
+    """
+
+    kind: str
+    rows: int
+    cols: int
+    ns: int = 1
+
+    def records(self):
+        """The per-tile instruction records of the blocked walk, in engine
+        dispatch order."""
+        if self.kind == "mac":
+            for i0, i1, j0, j1, c0, c1 in gemm_tiles(self.rows, self.cols,
+                                                     self.ns):
+                yield InstrRecord("mac", i1 - i0, c1 - c0, j1 - j0)
+        else:
+            for i0, i1, c0, c1 in ew_tiles(self.rows, self.cols):
+                yield InstrRecord(self.kind, i1 - i0, c1 - c0)
+
+
 class AMEEngine:
     """Executes the AME instruction subset of paper Table 1 on HBM-PIM.
 
@@ -150,7 +181,9 @@ class AMEEngine:
         self.total_flops = 0
         self.total_commands = 0
         self.log: List[cost_mod.PEPCostReport] = []
-        self.instrs: List[InstrRecord] = []
+        # per-instruction records (InstrRecord) or whole-shard spans
+        # (ShardSpan) from the batched executors, in dispatch order
+        self.instrs: List[object] = []
 
     # -- configuration (msettile*) ------------------------------------------
 
@@ -350,4 +383,68 @@ def ew_on_engine(eng: AMEEngine, kind: str, a: jnp.ndarray,
         eng.mld(1, b[i0:i1, c0:c1])
         getattr(eng, f"mf{kind}")(0, 0, 1)
         out[i0:i1, c0:c1] = np.asarray(eng.mst(0))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Batched whole-shard executors (the numeric fast path)
+#
+# One jitted call per shard instead of one engine instruction per <=128x4096
+# tile.  Bit-exactness with the per-tile walk (property-tested):
+#
+# * GEMM — every output element's value is a left fold over ascending k of
+#   ``RN16(RN32(acc + a_ik * b_kj))`` (the MAC-PEP's per-column-command FP16
+#   writeback; the f16*f16 product is exact in f32).  The blocked walk only
+#   *partitions* those per-element chains across tiles — the chain itself
+#   never observes M/N blocking, and K chunk boundaries add no rounding
+#   because the accumulator register is already FP16 at every step.  A
+#   single scan over the full ascending-k axis therefore reproduces each
+#   chain bit-for-bit while vectorizing over the whole (m, n) output.
+# * Element-wise — no accumulation at all; a whole-shard fused op is
+#   trivially the tiled result.
+#
+# Cost is charged via the closed-form shard aggregate (repro.core.cost),
+# which equals the per-instruction sum exactly; the instruction stream gets
+# one ShardSpan that the trace emitter re-expands per tile.
+# ---------------------------------------------------------------------------
+
+
+def gemm_on_engine_batched(eng: AMEEngine, a: jnp.ndarray,
+                           b: jnp.ndarray) -> np.ndarray:
+    """C = A @ B on ONE pseudo-channel engine, whole shard in one jit call.
+
+    Charges the same ledger totals as :func:`gemm_on_engine` (closed-form
+    aggregate; one log entry, one :class:`ShardSpan` instruction record)
+    and returns a bit-identical result.
+
+    Strategy is shape-adaptive: N == 1 (skinny GEMV) shards delegate to
+    the per-tile walk — its 128-row scan steps stay in XLA's inline
+    single-thread regime and measure faster than a whole-column scan,
+    whose (m,)-wide steps pay thread-pool dispatch 2048 times per
+    k-sweep.  Both strategies are bit-exact, so this is purely a
+    wall-clock choice.
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2
+    if n == 1:
+        return gemm_on_engine(eng, a, b)
+    # the whole shard is one mfmacc-semantics fold: _mac_outer with a zero
+    # accumulator, so the load-bearing rounding recipe lives in ONE place
+    out = np.asarray(_mac_outer(jnp.zeros((m, n), F16),
+                                jnp.asarray(a, F16), jnp.asarray(b, F16)))
+    agg = cost_mod.gemm_shard_cost(m, k, n)
+    eng._charge(agg, ShardSpan("mac", m, k, n))
+    return out
+
+
+def ew_on_engine_batched(eng: AMEEngine, kind: str, a: jnp.ndarray,
+                         b: jnp.ndarray) -> np.ndarray:
+    """Element-wise ``a <kind> b`` on ONE engine, whole shard in one call."""
+    assert a.shape == b.shape and kind in ("add", "sub", "mul")
+    m, c = a.shape
+    fn = {"add": _ew_add, "sub": _ew_sub, "mul": _ew_mul}[kind]
+    out = np.asarray(fn(jnp.asarray(a, F16), jnp.asarray(b, F16)))
+    agg = cost_mod.ew_shard_cost(kind, m, c)
+    eng._charge(agg, ShardSpan(kind, m, c))
     return out

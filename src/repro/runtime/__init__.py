@@ -33,12 +33,14 @@ from repro.runtime.placement import (
     block_2d,
     box_contains,
     get_placement,
+    placement_shards,
     row_striped,
     shard_mac_passes,
     validate_cover,
 )
 from repro.runtime.residency import BYTES_PER_ELEM, DeviceTensor, box_bytes
 from repro.runtime.scheduler import (
+    ENGINE_MODES,
     ChannelReport,
     PIMRuntime,
     RuntimeReport,
@@ -51,8 +53,10 @@ __all__ = [
     "CHANNEL_BANDWIDTH_BYTES_PER_S", "PIMDevice", "PIMStack",
     "TRANSFER_BYTES_PER_COMMAND", "transfer_cycles",
     "PLACEMENTS", "Shard", "balanced", "block_2d", "box_contains",
-    "get_placement", "row_striped", "shard_mac_passes", "validate_cover",
+    "get_placement", "placement_shards", "row_striped", "shard_mac_passes",
+    "validate_cover",
     "BYTES_PER_ELEM", "DeviceTensor", "box_bytes",
-    "ChannelReport", "PIMRuntime", "RuntimeReport", "pim_gemm", "pim_gemv",
+    "ENGINE_MODES", "ChannelReport", "PIMRuntime", "RuntimeReport",
+    "pim_gemm", "pim_gemv",
     "TraceStats", "dump_trace", "emit_trace", "parse_trace",
 ]

@@ -26,6 +26,7 @@ reduces them on the host in ascending-k order.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Dict, List, Tuple
 
@@ -223,3 +224,19 @@ def get_placement(name: str) -> Callable[[int, int, int, int], List[Shard]]:
     except KeyError:
         raise KeyError(f"unknown placement {name!r}; "
                        f"available: {sorted(PLACEMENTS)}") from None
+
+
+@functools.lru_cache(maxsize=4096)
+def placement_shards(policy: str, m: int, k: int, n: int,
+                     channels: int) -> Tuple[Shard, ...]:
+    """Memoized, cover-validated shard decomposition.
+
+    Placement functions are pure in ``(policy, m, k, n, channels)``, and
+    the serve loop's decode path recomputes the identical decomposition
+    every step — so the scheduler resolves shards through this cache.
+    Returns an immutable tuple (callers must not mutate shard lists), with
+    :func:`validate_cover` run once per distinct key instead of per op.
+    """
+    shards = tuple(get_placement(policy)(m, k, n, channels))
+    validate_cover(list(shards), m, k, n)
+    return shards

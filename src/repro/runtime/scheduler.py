@@ -31,13 +31,26 @@ in ascending-k order — the host-side reduction that balanced placement
 trades for utilization.  Partial output shards therefore always drain,
 even under ``keep_output``: the reduced value only exists on the host.
 
-Both execution modes charge *identical* ledgers (property-tested):
+Both execution modes charge *identical* ledgers (property-tested), and
+each has a fast path and a reference path:
 
 * ``execute=True``  — numerics run on each channel's :class:`AMEEngine`
   (order-exact FP16); output-space placements are bit-exact with a
-  single-channel run, with or without residency.
+  single-channel run, with or without residency.  The default
+  ``engine="batched"`` executor runs each whole shard as one jitted scan
+  (:func:`repro.core.engine.gemm_on_engine_batched`), bit-exact with the
+  per-tile ``engine="tiled"`` reference walk.
 * ``execute=False`` — analytic: only the cost model runs, for large-shape
-  sweeps (the benchmark channel-scaling and residency sections).
+  sweeps (the benchmark channel-scaling and residency sections).  Shards
+  are charged via closed-form tile-count formulas
+  (:func:`repro.core.cost.gemm_shard_cost`) in O(1) per shard; the
+  per-tile generator walk remains available as ``engine="tiled"`` and
+  charges bit-identical ledgers.
+
+Both fast paths record one :class:`~repro.core.engine.ShardSpan` per
+shard instead of per-tile instruction records; the trace emitter expands
+spans back to the identical per-tile command stream, so
+``emit_trace``/``parse_trace`` round-trips are unchanged.
 """
 from __future__ import annotations
 
@@ -50,16 +63,23 @@ import numpy as np
 from repro.core import cost as cost_mod
 from repro.core.engine import (
     InstrRecord,
+    ShardSpan,
     ew_on_engine,
+    ew_on_engine_batched,
     ew_tiles,
     gemm_on_engine,
+    gemm_on_engine_batched,
     gemm_tiles,
 )
 from repro.core.isa import PIM_FREQ_HZ
 from repro.runtime.device import PIMDevice, PIMStack, transfer_cycles
-from repro.runtime.placement import get_placement, validate_cover
+from repro.runtime.placement import placement_shards
 from repro.runtime.residency import BYTES_PER_ELEM, Box, DeviceTensor, \
     box_bytes
+
+#: shard executor modes: "batched" = whole-shard jitted fast path (and
+#: closed-form analytic costs); "tiled" = the per-tile reference walk
+ENGINE_MODES = ("batched", "tiled")
 
 F16 = np.float16
 
@@ -172,7 +192,9 @@ class RuntimeReport:
         return [c.utilization(mk) for c in self.per_channel]
 
     def summary(self) -> str:
-        us = self.utilizations()
+        # empty per_channel yields a degenerate all-zero line instead of
+        # min()/max() raising — guarded like flop_per_cycle
+        us = self.utilizations() or [0.0]
         busy = [c for c in self.per_channel if c.busy_cycles > 0]
         return (f"{self.op} {'x'.join(map(str, self.shape))} "
                 f"[{self.placement}, {self.channels}ch, {len(busy)} busy]: "
@@ -201,12 +223,26 @@ def _unwrap(x: Operand, stack: PIMStack
 
 
 class PIMRuntime:
-    """Schedules ops onto a :class:`PIMStack` and accounts them."""
+    """Schedules ops onto a :class:`PIMStack` and accounts them.
 
-    def __init__(self, channels: int = 1, stack: Optional[PIMStack] = None):
+    ``engine`` selects the default shard executor: ``"batched"`` (fast,
+    whole-shard jit / closed-form analytic) or ``"tiled"`` (the per-tile
+    reference).  Both are bit-exact and charge identical ledgers; per-op
+    ``engine=`` overrides the default.
+    """
+
+    def __init__(self, channels: int = 1, stack: Optional[PIMStack] = None,
+                 engine: str = "batched"):
+        assert engine in ENGINE_MODES, engine
         self.stack = stack if stack is not None else PIMStack(channels)
+        self.engine = engine
 
     # -- internals -----------------------------------------------------------
+
+    def _engine_mode(self, override: Optional[str]) -> str:
+        mode = self.engine if override is None else override
+        assert mode in ENGINE_MODES, mode
+        return mode
 
     def _record_instrs(self, dev: PIMDevice, n_before: int) -> None:
         for rec in dev.engine.instrs[n_before:]:
@@ -289,13 +325,13 @@ class PIMRuntime:
         handle = DeviceTensor(self.stack, shape, values=arr)
         if role == "A":
             m, k = shape
-            shards = get_placement(placement)(m, k, other_dim,
-                                              len(self.stack))
+            shards = placement_shards(placement, m, k, other_dim,
+                                      len(self.stack))
             boxes = [(s.channel, s.a_box) for s in shards]
         elif role == "B":
             k, n = shape
-            shards = get_placement(placement)(other_dim, k, n,
-                                              len(self.stack))
+            shards = placement_shards(placement, other_dim, k, n,
+                                      len(self.stack))
             boxes = [(s.channel, s.b_box) for s in shards]
         else:
             raise ValueError(f"role must be 'A' or 'B', got {role!r}")
@@ -311,7 +347,8 @@ class PIMRuntime:
     def gemm(self, a: Operand, b: Operand, *,
              placement: str = "row-striped",
              execute: bool = True,
-             keep_output: bool = False
+             keep_output: bool = False,
+             engine: Optional[str] = None
              ) -> Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
                         RuntimeReport]:
         """C = A(m,k) @ B(k,n) partitioned across the stack's channels.
@@ -320,16 +357,17 @@ class PIMRuntime:
         handles.  With ``keep_output=True`` the result is returned as a
         resident handle (exact-cover output shards stay on their channels;
         K-split partials still drain for the host reduction) instead of a
-        host array.
+        host array.  ``engine`` overrides the runtime's shard executor
+        ("batched"/"tiled") for this op.
         """
+        mode = self._engine_mode(engine)
         ah, a_vals, (m, k) = _unwrap(a, self.stack)
         bh, b_vals, (k2, n) = _unwrap(b, self.stack)
         assert k == k2, ((m, k), (k2, n))
         assert not execute or (a_vals is not None and b_vals is not None), \
             "analytic (shape-only) DeviceTensor operands require " \
             "execute=False"
-        shards = get_placement(placement)(m, k, n, len(self.stack))
-        validate_cover(shards, m, k, n)
+        shards = placement_shards(placement, m, k, n, len(self.stack))
 
         before = {d.channel_id: d.snapshot() for d in self.stack}
         lead_in: Dict[int, int] = {}
@@ -351,15 +389,23 @@ class PIMRuntime:
                 lead_in[s.channel] = transfer_cycles(first * BYTES_PER_ELEM)
             if execute:
                 n_before = len(dev.engine.instrs)
-                sub = gemm_on_engine(dev.engine,
-                                     a_vals[s.m0:s.m1, s.k0:s.k1],
-                                     b_vals[s.k0:s.k1, s.n0:s.n1])
+                run = gemm_on_engine_batched if mode == "batched" \
+                    else gemm_on_engine
+                sub = run(dev.engine,
+                          a_vals[s.m0:s.m1, s.k0:s.k1],
+                          b_vals[s.k0:s.k1, s.n0:s.n1])
                 self._record_instrs(dev, n_before)
                 if s.is_partial(k):
                     partials.setdefault((s.m0, s.m1, s.n0, s.n1), []) \
                         .append((s.k0, sub))
                 else:
                     out[s.m0:s.m1, s.n0:s.n1] = sub
+            elif mode == "batched":
+                # closed-form: O(1) per shard, bit-identical to the walk
+                agg = cost_mod.gemm_shard_cost(s.rows, s.ks, s.ns)
+                dev.charge_analytic(agg.cycles, agg.flops, agg.commands)
+                dev.events.append(
+                    ("instr", ShardSpan("mac", s.rows, s.ks, s.ns)))
             else:
                 for i0, i1, j0, j1, c0, c1 in gemm_tiles(s.rows, s.ks, s.ns):
                     rep = cost_mod.mfmacc_cost(i1 - i0, c1 - c0, j1 - j0)
@@ -388,7 +434,8 @@ class PIMRuntime:
 
     def gemv(self, a: Operand, x: jnp.ndarray, *,
              placement: str = "row-striped",
-             execute: bool = True
+             execute: bool = True,
+             engine: Optional[str] = None
              ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
         """y = A @ x (the MPC-Wrapper comparison workload), as N=1 GEMM.
 
@@ -399,7 +446,8 @@ class PIMRuntime:
         assert not isinstance(x, DeviceTensor), \
             "gemv x must be a host vector; place A instead"
         y, rep = self.gemm(a, np.asarray(x, F16)[:, None],
-                           placement=placement, execute=execute)
+                           placement=placement, execute=execute,
+                           engine=engine)
         rep = dataclasses.replace(rep, op="gemv")
         return (y[:, 0] if y is not None else None), rep
 
@@ -408,7 +456,8 @@ class PIMRuntime:
     def elementwise(self, kind: str, a: Operand, b: Operand, *,
                     placement: str = "row-striped",
                     execute: bool = True,
-                    keep_output: bool = False
+                    keep_output: bool = False,
+                    engine: Optional[str] = None
                     ) -> Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
                                RuntimeReport]:
         """out = a <kind> b partitioned over the (M, C) output grid.
@@ -424,14 +473,14 @@ class PIMRuntime:
         result resident the same way.
         """
         assert kind in ("add", "sub", "mul")
+        mode = self._engine_mode(engine)
         ah, a_vals, (m, c) = _unwrap(a, self.stack)
         bh, b_vals, bshape = _unwrap(b, self.stack)
         assert (m, c) == bshape, ((m, c), bshape)
         assert not execute or (a_vals is not None and b_vals is not None), \
             "analytic (shape-only) DeviceTensor operands require " \
             "execute=False"
-        shards = get_placement(placement)(m, c, 1, len(self.stack))
-        validate_cover(shards, m, c, 1)
+        shards = placement_shards(placement, m, c, 1, len(self.stack))
 
         before = {d.channel_id: d.snapshot() for d in self.stack}
         lead_in: Dict[int, int] = {}
@@ -452,11 +501,17 @@ class PIMRuntime:
                 lead_in[s.channel] = transfer_cycles(first * BYTES_PER_ELEM)
             if execute:
                 n_before = len(dev.engine.instrs)
-                sub = ew_on_engine(dev.engine, kind,
-                                   a_vals[s.m0:s.m1, s.k0:s.k1],
-                                   b_vals[s.m0:s.m1, s.k0:s.k1])
+                run = ew_on_engine_batched if mode == "batched" \
+                    else ew_on_engine
+                sub = run(dev.engine, kind,
+                          a_vals[s.m0:s.m1, s.k0:s.k1],
+                          b_vals[s.m0:s.m1, s.k0:s.k1])
                 self._record_instrs(dev, n_before)
                 out[s.m0:s.m1, s.k0:s.k1] = sub
+            elif mode == "batched":
+                agg = cost_mod.ew_shard_cost(kind, s.rows, s.ks)
+                dev.charge_analytic(agg.cycles, agg.flops, agg.commands)
+                dev.events.append(("instr", ShardSpan(kind, s.rows, s.ks)))
             else:
                 for i0, i1, c0, c1 in ew_tiles(s.rows, s.ks):
                     rep = cost_mod.elementwise_cost(kind, i1 - i0, c1 - c0)
@@ -482,16 +537,18 @@ class PIMRuntime:
 
 
 def pim_gemm(a: jnp.ndarray, b: jnp.ndarray, channels: int = 1,
-             placement: str = "row-striped", execute: bool = True
+             placement: str = "row-striped", execute: bool = True,
+             engine: str = "batched"
              ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
     """C = A @ B entirely in PIM mode on a fresh ``channels``-wide stack."""
-    return PIMRuntime(channels=channels).gemm(a, b, placement=placement,
-                                              execute=execute)
+    return PIMRuntime(channels=channels, engine=engine).gemm(
+        a, b, placement=placement, execute=execute)
 
 
 def pim_gemv(a: jnp.ndarray, x: jnp.ndarray, channels: int = 1,
-             placement: str = "row-striped", execute: bool = True
+             placement: str = "row-striped", execute: bool = True,
+             engine: str = "batched"
              ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
     """y = A @ x entirely in PIM mode on a fresh ``channels``-wide stack."""
-    return PIMRuntime(channels=channels).gemv(a, x, placement=placement,
-                                              execute=execute)
+    return PIMRuntime(channels=channels, engine=engine).gemv(
+        a, x, placement=placement, execute=execute)

@@ -37,7 +37,7 @@ import dataclasses
 import re
 from typing import Dict, List, Optional
 
-from repro.core.engine import InstrRecord
+from repro.core.engine import InstrRecord, ShardSpan
 from repro.core.isa import (
     AAM_BLOCKS,
     GRF_REGS,
@@ -201,11 +201,16 @@ def emit_trace(stack: PIMStack) -> str:
                 # parser round-trips the avoided traffic
                 lines.append(f"# RESIDENT {dev.channel_id} {payload}")
             elif kind == "instr":
-                rec: InstrRecord = payload
-                if rec.kind == "mac":
-                    _expand_mac(lines, rec)
-                else:
-                    _expand_ew(lines, rec)
+                # whole-shard spans (the fast paths' aggregated records)
+                # expand to the identical per-tile instruction sequence,
+                # so fast and reference traces are byte-for-byte equal
+                recs = payload.records() if isinstance(payload, ShardSpan) \
+                    else (payload,)
+                for rec in recs:
+                    if rec.kind == "mac":
+                        _expand_mac(lines, rec)
+                    else:
+                        _expand_ew(lines, rec)
             else:
                 raise ValueError(kind)
     return "\n".join(lines) + "\n"

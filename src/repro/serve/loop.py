@@ -9,8 +9,12 @@ scaled to run on this host with reduced configs.
 Pass ``pim_offload=DecodeOffload(cfg, ...)`` to mirror every decode
 step's matmuls onto a resident-weight PIM runtime (balanced placement,
 weights uploaded once): the sidecar accumulates a per-step PIM-vs-host
-roofline without touching the numeric path — see
-:mod:`repro.serve.offload`.
+roofline without touching the serving numerics — see
+:mod:`repro.serve.offload`.  With ``DecodeOffload(cfg, numeric=True)``
+(small configs) the sidecar additionally executes each step's matmul set
+on the per-channel engines and cross-checks every output — lm_head
+logits included — against an XLA reference within FP16 accumulation
+tolerance, while charging the same ledgers as the analytic sidecar.
 """
 from __future__ import annotations
 

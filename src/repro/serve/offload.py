@@ -10,7 +10,7 @@ handles (balanced placement), so the steady-state per-step h2d traffic is
 the activation vectors alone — weight re-transfer amortizes to zero after
 step 1.
 
-The sidecar is *accounting-only* by design: the numeric decode keeps
+The default sidecar is *accounting-only*: the numeric decode keeps
 running through XLA (weights are shape-only analytic handles, never
 materialized — full-scale configs stay placeable), while every step
 yields a :class:`StepRecord` combining the accumulated
@@ -19,6 +19,16 @@ yields a :class:`StepRecord` combining the accumulated
     pim_s  = sum of per-op makespans / PIM_FREQ_HZ      (ops serialize)
     host_s = max(flops / PEAK_FLOPS, bytes / HBM_BW)    (TPU v5e roofline)
 
+``numeric=True`` (small configs only) additionally *runs* every decode
+matmul on the per-channel engines: weights are materialized (seeded
+FP16) and placed resident, each step's activations flow through the
+batched engines, and every output — the lm_head logits included — is
+cross-checked against an XLA reference of the same matmul set within
+FP16 accumulation tolerance.  The ledgers are identical to the analytic
+sidecar's (execute/analytic parity is property-tested), so the roofline
+trajectory is unchanged; the numerics close the ROADMAP
+"numeric decode-on-PIM" item.
+
 ``dump`` writes the trajectory as ``results/dryrun/*.pim_offload.json``
 so future changes to the cost model have a BENCH baseline to diff.
 """
@@ -26,8 +36,9 @@ from __future__ import annotations
 
 import dataclasses
 import json
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
@@ -36,6 +47,16 @@ from repro.launch import hw
 from repro.runtime import BYTES_PER_ELEM, DeviceTensor, PIMRuntime
 
 F16 = np.float16
+
+#: numeric mode materializes every decode weight on the host — refuse
+#: configs past this, the regime stays "small config, cross-check"
+NUMERIC_MAX_WEIGHT_BYTES = 64 << 20
+
+#: |y_pim - y_xla| ceiling for the numeric cross-check.  The PIM engines
+#: round the accumulator to FP16 per ascending-k step while XLA
+#: accumulates in FP32, so the gap is genuine FP16 accumulation error —
+#: O(sqrt(k) * 2^-11 * |y|) for the decode shapes, far below this bound.
+NUMERIC_ATOL = 0.05
 
 
 # ---------------------------------------------------------------------------
@@ -128,6 +149,9 @@ class StepRecord:
     flops: int
     host_s: float               # TPU v5e roofline time for the same math
     host_bound: str             # 'memory' | 'compute'
+    numeric: bool = False       # matmuls executed on the engines this step
+    numeric_max_err: float = 0.0    # max |y_pim - y_xla| over the step
+    logits_max_err: float = 0.0     # same, lm_head output only
 
     @property
     def pim_vs_host(self) -> float:
@@ -141,29 +165,55 @@ class StepRecord:
 
 
 class DecodeOffload:
-    """Accounting sidecar: one serve loop's decode path on resident PIM.
+    """Sidecar: one serve loop's decode path on resident PIM.
 
-    Weights are placed once at construction (analytic, shape-only) with the
-    given placement; :meth:`step` replays one decode step's matmuls through
-    the runtime in cost mode and records the roofline.  Attach to a
-    :class:`repro.serve.loop.Server` via its ``pim_offload`` argument, or
-    drive it directly (the residency benchmark sweep does).
+    Weights are placed once at construction with the given placement;
+    :meth:`step` replays one decode step's matmuls through the runtime
+    and records the roofline.  Attach to a :class:`repro.serve.loop.Server`
+    via its ``pim_offload`` argument, or drive it directly (the residency
+    benchmark sweep does).
+
+    Default mode is accounting-only (analytic, shape-only handles).  With
+    ``numeric=True`` the weights are materialized (seeded FP16) and every
+    step's matmuls — activations included — execute on the per-channel
+    engines, cross-checked element-wise against an XLA reference
+    (:meth:`_xla_reference`); the lm_head output is the step's logits and
+    its deviation is tracked separately (``logits_max_err``).  Small
+    configs only (:data:`NUMERIC_MAX_WEIGHT_BYTES`).
     """
 
     def __init__(self, cfg: ArchConfig, *, channels: int = 16,
-                 placement: str = "balanced"):
+                 placement: str = "balanced", numeric: bool = False,
+                 seed: int = 0, atol: float = NUMERIC_ATOL,
+                 engine: str = "batched"):
         self.cfg = cfg
         self.placement = placement
-        self.rt = PIMRuntime(channels=channels)
+        self.numeric = numeric
+        self.atol = atol
+        self.rt = PIMRuntime(channels=channels, engine=engine)
         self.matmuls = decode_matmuls(cfg)
+        if numeric and self.weight_bytes > NUMERIC_MAX_WEIGHT_BYTES:
+            raise ValueError(
+                f"numeric decode offload materializes every weight; "
+                f"{self.weight_bytes} bytes exceeds the small-config cap "
+                f"{NUMERIC_MAX_WEIGHT_BYTES} — use a cfg.reduced()")
+        rng = np.random.default_rng(seed)
         self.weights: List[Tuple[DecodeMatmul, List[DeviceTensor]]] = []
         for m in self.matmuls:
-            handles = [self.rt.place((m.out_dim, m.in_dim),
-                                     placement=placement)
-                       for _ in range(m.count)]
+            handles = []
+            for _ in range(m.count):
+                if numeric:
+                    w = (rng.standard_normal((m.out_dim, m.in_dim))
+                         * 0.05).astype(F16)
+                    handles.append(self.rt.place(w, placement=placement))
+                else:
+                    handles.append(self.rt.place((m.out_dim, m.in_dim),
+                                                 placement=placement))
             self.weights.append((m, handles))
         self.upload_bytes = sum(d.xfer.h2d_bytes for d in self.rt.stack)
         self.steps: List[StepRecord] = []
+        self.last_logits: Optional[np.ndarray] = None     # numeric mode
+        self._rng = rng
         self._act_cache: Dict[Tuple[int, int], np.ndarray] = {}
 
     @property
@@ -171,24 +221,62 @@ class DecodeOffload:
         """FP16 bytes of all decode weights (the host-side HBM read/step)."""
         return sum(m.weight_bytes for m in self.matmuls)
 
+    def _activation(self, in_dim: int, batch: int) -> np.ndarray:
+        """The step's (in_dim, batch) activation block.
+
+        Analytic mode re-uses one zeros buffer per shape (shapes are all
+        the gemm reads); numeric mode draws fresh seeded values so every
+        step exercises a different accumulation pattern — matmuls sharing
+        ``in_dim`` within a step share the block, like the decode hidden
+        state feeding every projection.
+        """
+        key = (in_dim, batch)
+        if not self.numeric:
+            x = self._act_cache.get(key)
+            if x is None:
+                x = self._act_cache[key] = np.zeros(key, F16)
+            return x
+        x = self._act_cache.get(key)
+        if x is None:
+            x = self._act_cache[key] = \
+                (self._rng.standard_normal(key) * 0.05).astype(F16)
+        return x
+
+    @staticmethod
+    def _xla_reference(w: np.ndarray, x: np.ndarray) -> np.ndarray:
+        """The decode step's XLA math for one matmul: FP32 matmul of the
+        FP16 operands, like ``decode_step``'s compute-dtype path."""
+        return np.asarray(jnp.matmul(jnp.asarray(w, jnp.float32),
+                                     jnp.asarray(x, jnp.float32)))
+
     def step(self, batch: int) -> StepRecord:
-        """Account one decode step over ``batch`` live slots."""
+        """Account (and in numeric mode, execute) one decode step over
+        ``batch`` live slots."""
         before = {d.channel_id: d.snapshot() for d in self.rt.stack}
         pim_cycles = 0.0
         flops = 0
         act_bytes = 0
+        max_err = logits_err = 0.0
+        if self.numeric:
+            self._act_cache.clear()     # fresh activations each step
         for m, handles in self.weights:
-            # analytic gemms only read the shape; reuse one zeros buffer
-            # per (in_dim, batch) instead of allocating every step
-            key = (m.in_dim, batch)
-            x = self._act_cache.get(key)
-            if x is None:
-                x = self._act_cache[key] = np.zeros(key, F16)
+            x = self._activation(m.in_dim, batch)
             for h in handles:
-                _, rep = self.rt.gemm(h, x, placement=self.placement,
-                                      execute=False)
+                y, rep = self.rt.gemm(h, x, placement=self.placement,
+                                      execute=self.numeric)
                 pim_cycles += rep.makespan_cycles    # ops serialize per step
                 flops += rep.total_flops
+                if self.numeric:
+                    ref = self._xla_reference(h.values, x)
+                    err = float(np.max(np.abs(
+                        np.asarray(y, np.float32) - ref)))
+                    assert err < self.atol, \
+                        (m.name, err, "PIM numeric decode diverged from "
+                         "the XLA path beyond FP16 accumulation tolerance")
+                    max_err = max(max_err, err)
+                    if m.name == "lm_head":
+                        logits_err = max(logits_err, err)
+                        self.last_logits = np.asarray(y)
             act_bytes += m.in_dim * batch * BYTES_PER_ELEM * m.count
         h2d = sum(d.xfer.h2d_bytes - before[d.channel_id].h2d_bytes
                   for d in self.rt.stack)
@@ -205,7 +293,9 @@ class DecodeOffload:
             h2d_bytes=h2d, d2h_bytes=d2h, reuse_bytes=reuse, flops=flops,
             host_s=max(host_compute_s, host_memory_s),
             host_bound=("compute" if host_compute_s > host_memory_s
-                        else "memory"))
+                        else "memory"),
+            numeric=self.numeric, numeric_max_err=max_err,
+            logits_max_err=logits_err)
         self.steps.append(rec)
         return rec
 

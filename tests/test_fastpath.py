@@ -1,0 +1,315 @@
+"""Fast-vs-reference equivalence for the execution fast paths.
+
+Pins the PR's core contracts:
+* the batched numeric executors (whole-shard jitted scan) are bit-exact
+  with the per-tile ``gemm_on_engine``/``ew_on_engine`` walk;
+* closed-form analytic ledgers (cycles/flops/commands/bytes) exactly
+  match the generator-walk ledgers across ragged shapes, all placements,
+  1/4/16 channels;
+* traces emitted from the fast paths are byte-identical to the
+  reference paths' (ShardSpan expansion);
+* placement shard decomposition is memoized;
+* RuntimeReport.summary() survives an empty per_channel tuple;
+* DecodeOffload(numeric=True) logits match the XLA decode path within
+  FP16 accumulation tolerance and charge the analytic sidecar's ledgers.
+"""
+import numpy as np
+import pytest
+
+from repro.core import cost as cost_mod
+from repro.core.engine import (
+    AMEEngine,
+    ShardSpan,
+    ew_on_engine,
+    ew_on_engine_batched,
+    ew_tiles,
+    gemm_on_engine,
+    gemm_on_engine_batched,
+    gemm_tiles,
+)
+from repro.runtime import (
+    PLACEMENTS,
+    PIMRuntime,
+    RuntimeReport,
+    get_placement,
+    pim_gemm,
+    pim_gemv,
+    placement_shards,
+)
+from repro.runtime.trace import emit_trace, parse_trace
+
+RNG = np.random.default_rng(19)
+
+
+def rand(m, n, scale=0.2):
+    return (RNG.standard_normal((m, n)) * scale).astype(np.float16)
+
+
+def ledgers(rep):
+    return [(c.channel, c.compute_cycles, c.flops, c.commands,
+             c.h2d_bytes, c.d2h_bytes, c.h2d_cycles, c.d2h_cycles,
+             c.lead_in_cycles, c.reuse_bytes, c.dedupe_bytes)
+            for c in rep.per_channel]
+
+
+# ---------------------------------------------------------------------------
+# closed-form shard costs == generator-walk sums, exactly
+# ---------------------------------------------------------------------------
+
+GEMM_SHARDS = [
+    (1, 1, 1),
+    (127, 7, 1),
+    (128, 4096, 128),       # the paper's max tile, exactly one class
+    (129, 4097, 2),         # ragged edge on every axis
+    (256, 8192, 129),
+    (1000, 100, 7),
+    (512, 4096, 512),
+]
+
+
+@pytest.mark.parametrize("rows,ks,ns", GEMM_SHARDS)
+def test_gemm_shard_cost_equals_tile_walk(rows, ks, ns):
+    walk = [cost_mod.mfmacc_cost(i1 - i0, c1 - c0, j1 - j0)
+            for i0, i1, j0, j1, c0, c1 in gemm_tiles(rows, ks, ns)]
+    agg = cost_mod.gemm_shard_cost(rows, ks, ns)
+    assert agg.launches == sum(r.launches for r in walk)
+    assert agg.passes == sum(r.passes for r in walk)
+    assert agg.commands == sum(r.commands for r in walk)
+    assert agg.flops == sum(r.flops for r in walk)
+    assert agg.cycles == sum(r.cycles for r in walk)   # exact, not approx
+
+
+@pytest.mark.parametrize("kind", ["add", "sub", "mul"])
+@pytest.mark.parametrize("rows,cols", [(1, 1), (127, 4097), (128, 2048),
+                                       (300, 96), (1000, 8200)])
+def test_ew_shard_cost_equals_tile_walk(kind, rows, cols):
+    walk = [cost_mod.elementwise_cost(kind, i1 - i0, c1 - c0)
+            for i0, i1, c0, c1 in ew_tiles(rows, cols)]
+    agg = cost_mod.ew_shard_cost(kind, rows, cols)
+    assert agg.launches == sum(r.launches for r in walk)
+    assert agg.commands == sum(r.commands for r in walk)
+    assert agg.flops == sum(r.flops for r in walk)
+    assert agg.cycles == sum(r.cycles for r in walk)
+
+
+def test_shard_span_expands_to_walk_records():
+    span = ShardSpan("mac", 300, 4200, 130)
+    recs = list(span.records())
+    walk = [(i1 - i0, c1 - c0, j1 - j0)
+            for i0, i1, j0, j1, c0, c1 in gemm_tiles(300, 4200, 130)]
+    assert [(r.m, r.k, r.n) for r in recs] == walk
+    span = ShardSpan("sub", 300, 4200)
+    assert [(r.m, r.k) for r in span.records()] == \
+        [(i1 - i0, c1 - c0) for i0, i1, c0, c1 in ew_tiles(300, 4200)]
+
+
+# ---------------------------------------------------------------------------
+# engine-level: batched executors bit-exact + ledger-identical
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,k,n", [(128, 64, 32), (300, 520, 130),
+                                   (129, 4097, 2), (64, 8, 1)])
+def test_engine_batched_gemm_bit_exact(m, k, n):
+    a, b = rand(m, k), rand(k, n)
+    e1, e2 = AMEEngine(), AMEEngine()
+    out_t = gemm_on_engine(e1, a, b)
+    out_b = gemm_on_engine_batched(e2, a, b)
+    np.testing.assert_array_equal(out_t, out_b)
+    assert e1.total_cycles == e2.total_cycles
+    assert e1.total_flops == e2.total_flops
+    assert e1.total_commands == e2.total_commands
+    assert sum(r.launches for r in e1.log) == \
+        sum(r.launches for r in e2.log)
+
+
+@pytest.mark.parametrize("kind", ["add", "sub", "mul"])
+def test_engine_batched_ew_bit_exact(kind):
+    a, b = rand(300, 4200), rand(300, 4200)
+    e1, e2 = AMEEngine(), AMEEngine()
+    out_t = ew_on_engine(e1, kind, a, b)
+    out_b = ew_on_engine_batched(e2, kind, a, b)
+    np.testing.assert_array_equal(out_t, out_b)
+    assert e1.total_cycles == e2.total_cycles
+    assert e1.total_commands == e2.total_commands
+
+
+# ---------------------------------------------------------------------------
+# runtime-level: fast paths vs reference across placements / channels
+# ---------------------------------------------------------------------------
+
+SHAPES = [(128, 64, 32), (300, 520, 130), (256, 2048, 1), (1000, 100, 7)]
+
+
+@pytest.mark.parametrize("placement", sorted(PLACEMENTS))
+@pytest.mark.parametrize("channels", [1, 4, 16])
+def test_runtime_batched_gemm_bit_exact_and_ledger_parity(placement,
+                                                          channels):
+    for m, k, n in SHAPES:
+        a, b = rand(m, k), rand(k, n)
+        out_t, rep_t = PIMRuntime(channels, engine="tiled").gemm(
+            a, b, placement=placement)
+        out_b, rep_b = PIMRuntime(channels, engine="batched").gemm(
+            a, b, placement=placement)
+        np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_b))
+        assert ledgers(rep_t) == ledgers(rep_b), (placement, channels,
+                                                  (m, k, n))
+        assert rep_t.makespan_cycles == rep_b.makespan_cycles
+
+
+@pytest.mark.parametrize("placement", sorted(PLACEMENTS))
+@pytest.mark.parametrize("channels", [1, 4, 16])
+def test_analytic_closed_form_ledger_parity(placement, channels):
+    for m, k, n in SHAPES + [(512, 4096, 512)]:
+        a = np.zeros((m, k), np.float16)
+        b = np.zeros((k, n), np.float16)
+        _, rep_w = PIMRuntime(channels, engine="tiled").gemm(
+            a, b, placement=placement, execute=False)
+        _, rep_c = PIMRuntime(channels, engine="batched").gemm(
+            a, b, placement=placement, execute=False)
+        assert ledgers(rep_w) == ledgers(rep_c), (placement, channels,
+                                                  (m, k, n))
+
+
+@pytest.mark.parametrize("kind", ["add", "sub", "mul"])
+def test_runtime_batched_elementwise_parity(kind):
+    a, b = rand(300, 96), rand(300, 96)
+    out_t, rep_t = PIMRuntime(4, engine="tiled").elementwise(kind, a, b)
+    out_b, rep_b = PIMRuntime(4, engine="batched").elementwise(kind, a, b)
+    np.testing.assert_array_equal(np.asarray(out_t), np.asarray(out_b))
+    assert ledgers(rep_t) == ledgers(rep_b)
+    _, rep_wa = PIMRuntime(4, engine="tiled").elementwise(
+        kind, a, b, execute=False)
+    _, rep_ca = PIMRuntime(4, engine="batched").elementwise(
+        kind, a, b, execute=False)
+    assert ledgers(rep_wa) == ledgers(rep_ca) == ledgers(rep_t)
+
+
+def test_gemv_batched_matches_tiled():
+    a, x = rand(1000, 2048, 0.1), rand(2048, 1, 0.1)[:, 0]
+    y_t, rep_t = pim_gemv(a, x, channels=16, placement="balanced",
+                          engine="tiled")
+    y_b, rep_b = pim_gemv(a, x, channels=16, placement="balanced",
+                          engine="batched")
+    np.testing.assert_array_equal(np.asarray(y_t), np.asarray(y_b))
+    assert ledgers(rep_t) == ledgers(rep_b)
+
+
+def test_residency_paths_identical_across_engines():
+    """Resident-handle ops charge the same ledgers and stay bit-exact on
+    both executors (the decode steady-state regime)."""
+    a, x = rand(256, 2048, 0.1), rand(2048, 1, 0.1)[:, 0]
+    outs, reps = [], []
+    for mode in ("tiled", "batched"):
+        rt = PIMRuntime(16, engine=mode)
+        w = rt.place(a, placement="balanced")
+        rt.gemv(w, x, placement="balanced")           # warm: marks resident
+        y, rep = rt.gemv(w, x, placement="balanced")  # steady state
+        outs.append(np.asarray(y))
+        reps.append(rep)
+    np.testing.assert_array_equal(*outs)
+    assert ledgers(reps[0]) == ledgers(reps[1])
+    assert reps[0].total_reuse_bytes == reps[1].total_reuse_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# traces: fast paths emit byte-identical command streams
+# ---------------------------------------------------------------------------
+
+def test_trace_byte_identical_across_paths():
+    a, b = rand(200, 4100, 0.1), rand(4100, 24, 0.1)
+    texts = {}
+    for tag, (mode, execute) in {
+            "tiled": ("tiled", True), "batched": ("batched", True),
+            "analytic": ("batched", False)}.items():
+        rt = PIMRuntime(2, engine=mode)
+        rt.gemm(a, b, execute=execute)
+        rt.elementwise("sub", rand(140, 40), rand(140, 40),
+                       execute=execute)
+        texts[tag] = emit_trace(rt.stack)
+    assert texts["tiled"] == texts["batched"] == texts["analytic"]
+    stats = parse_trace(texts["batched"])
+    assert stats.pim_commands > 0 and stats.launches > 0
+
+
+# ---------------------------------------------------------------------------
+# satellites: memoized placements, summary() guard
+# ---------------------------------------------------------------------------
+
+def test_placement_shards_memoized_and_correct():
+    s1 = placement_shards("balanced", 640, 512, 4, 16)
+    s2 = placement_shards("balanced", 640, 512, 4, 16)
+    assert s1 is s2                       # cache hit returns same tuple
+    assert isinstance(s1, tuple)
+    assert list(s1) == get_placement("balanced")(640, 512, 4, 16)
+    s3 = placement_shards("balanced", 640, 512, 5, 16)
+    assert s3 is not s1
+
+
+def test_summary_survives_empty_per_channel():
+    rep = RuntimeReport(op="gemm", shape=(0, 0, 0), placement="row-striped",
+                        channels=0, per_channel=())
+    text = rep.summary()
+    assert "makespan=0" in text
+    assert rep.flop_per_cycle == 0.0
+
+
+def test_runtime_rejects_unknown_engine():
+    with pytest.raises(AssertionError):
+        PIMRuntime(1, engine="warp")
+    with pytest.raises(AssertionError):
+        PIMRuntime(1).gemm(rand(8, 8), rand(8, 4), engine="warp")
+
+
+# ---------------------------------------------------------------------------
+# numeric decode-on-PIM (the unlocked ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def test_decode_offload_numeric_logits_match_xla():
+    from repro.configs import get
+    from repro.serve.offload import DecodeOffload
+
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=16, placement="balanced",
+                        numeric=True)
+    ana = DecodeOffload(cfg, channels=16, placement="balanced")
+    for _ in range(2):
+        rn, ra = off.step(4), ana.step(4)
+        # logits within FP16 accumulation tolerance of the XLA path
+        assert rn.numeric and rn.logits_max_err < 1e-2
+        assert rn.numeric_max_err < 1e-2
+        # identical ledgers to the accounting-only sidecar
+        assert (rn.pim_cycles, rn.h2d_bytes, rn.d2h_bytes, rn.reuse_bytes,
+                rn.flops) == (ra.pim_cycles, ra.h2d_bytes, ra.d2h_bytes,
+                              ra.reuse_bytes, ra.flops)
+    assert off.last_logits is not None
+    assert off.last_logits.shape == (cfg.vocab_padded, 4)
+    # steady state: weights fully amortized on the numeric path too
+    assert off.steps[-1].reuse_bytes == off.weight_bytes
+
+
+def test_decode_offload_numeric_rejects_large_configs():
+    from repro.configs import get
+    from repro.serve.offload import DecodeOffload
+
+    with pytest.raises(ValueError):
+        DecodeOffload(get("qwen3-1.7b"), numeric=True)
+
+
+def test_decode_offload_numeric_detects_divergence():
+    """The cross-check actually fires: corrupt a resident weight mirror
+    and the next numeric step must raise."""
+    from repro.configs import get
+    from repro.serve.offload import DecodeOffload
+
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=4, placement="balanced", numeric=True)
+    off.step(2)
+    ref = DecodeOffload._xla_reference
+    try:
+        # sabotage the XLA reference, not the shared mirror
+        DecodeOffload._xla_reference = staticmethod(
+            lambda w, x: ref(w, x) + 1.0)
+        with pytest.raises(AssertionError):
+            off.step(2)
+    finally:
+        DecodeOffload._xla_reference = staticmethod(ref)

@@ -15,6 +15,11 @@ cost model + the functional PIM engine.
             (bit-exact) and closed-form vs generator-walk analytic costs
             (identical ledgers), with wall-clock regression gates; the
             measured numbers feed ``results/BENCH_runtime.json``
+  cluster — multi-stack scaling sweep: fixed-total-channel reshapes are
+            makespan-parity (host-link bytes only where shards cross
+            stacks), 1/2/4-stack GEMM + balanced-GEMV scaling efficiency,
+            and the multi-stack decode offload; scaling-efficiency gates
+            feed ``results/BENCH_runtime.json`` (CI ``bench-cluster``)
 
 Each returns rows of (name, us_per_call, derived) where us_per_call is the
 measured host execution time of the functional engine (small tiles; the
@@ -296,6 +301,104 @@ def residency_sweep() -> List[Row]:
 #: benchmarks.run when writing the ``results/BENCH_runtime.json`` artifact
 LAST_ENGINE_METRICS: dict = {}
 
+#: measured multi-stack metrics of the last ``cluster`` section run —
+#: merged into ``results/BENCH_runtime.json`` the same way
+LAST_CLUSTER_METRICS: dict = {}
+
+
+def cluster_sweep() -> List[Row]:
+    """Multi-stack cluster scaling (analytic mode — ledgers identical to
+    numeric execution, property-tested in tests/test_cluster.py).
+
+    Gates (CI ``bench-cluster``):
+
+    * fixed-total-channel parity — 16 flat channels reshaped as 1x16 /
+      2x8 / 4x4 stacks produce *identical* makespans, with host-link
+      bytes appearing only where shards actually cross stacks;
+    * 1/2/4-stack scaling efficiency >= 0.9 for the paper-scale GEMM
+      (2d-block) and the full-vocab decode GEMV (balanced) at 16
+      channels per stack — cross-stack traffic rides the host link, so
+      makespan scaling must stay near-linear;
+    * the multi-stack decode offload amortizes weights (reuse == weight
+      bytes) with per-step cycles identical to single-stack (stack-
+      restricted ops keep the per-stack decomposition) and zero link
+      traffic (layers live on their home stacks).
+    """
+    rows: List[Row] = []
+
+    # fixed total channels: makespan parity, link bytes only on crossings
+    m = k = n = 512
+    a = np.broadcast_to(np.float16(0), (m, k))
+    b = np.broadcast_to(np.float16(0), (k, n))
+    parity = {}
+    for stacks, cps in [(1, 16), (2, 8), (4, 4)]:
+        _, rep = pim_gemm(a, b, channels=cps, placement="2d-block",
+                          execute=False, stacks=stacks)
+        parity[stacks] = rep.makespan_cycles
+        rows.append((f"cluster/parity_gemm_{m}x{k}x{n}_{stacks}x{cps}", 0.0,
+                     f"makespan={rep.makespan_cycles:.0f} "
+                     f"link_bytes={rep.host_link_bytes} "
+                     f"cluster_makespan={rep.cluster_makespan_cycles:.0f}"))
+        if stacks == 1:
+            assert rep.host_link_bytes == 0
+        else:
+            assert rep.host_link_bytes > 0     # 2d-block replicates boxes
+    assert parity[2] == parity[1] and parity[4] == parity[1], parity
+    LAST_CLUSTER_METRICS["parity_makespan"] = parity[1]
+
+    # 1/2/4-stack scaling at 16 channels per stack
+    def scale(tag, pm, pk, pn, placement):
+        aa = np.broadcast_to(np.float16(0), (pm, pk))
+        bb = np.broadcast_to(np.float16(0), (pk, pn))
+        base = None
+        eff = {}
+        for stacks in (1, 2, 4):
+            t0 = time.perf_counter()
+            _, rep = pim_gemm(aa, bb, channels=16, placement=placement,
+                              execute=False, stacks=stacks)
+            us = (time.perf_counter() - t0) * 1e6
+            base = base or rep.cluster_makespan_cycles
+            speedup = base / rep.cluster_makespan_cycles
+            eff[stacks] = speedup / stacks
+            rows.append((f"cluster/{tag}_{placement}_{stacks}stack", us,
+                         f"makespan={rep.makespan_cycles:.0f} "
+                         f"speedup={speedup:.2f} eff={eff[stacks]:.2f} "
+                         f"link_bytes={rep.host_link_bytes}"))
+        return eff
+
+    gemm_eff = scale("gemm_2048x4096x2048", 2048, 4096, 2048, "2d-block")
+    gemv_eff = scale("gemv_151936x8192", 151936, 8192, 1, "balanced")
+    assert gemm_eff[4] >= 0.9, gemm_eff
+    assert gemv_eff[4] >= 0.9, gemv_eff
+    LAST_CLUSTER_METRICS.update(
+        gemm_eff_4stack=gemm_eff[4], gemv_eff_4stack=gemv_eff[4])
+
+    # multi-stack decode offload: layers on home stacks
+    from repro.configs import get
+    from repro.serve.offload import DecodeOffload
+
+    cfg = get("qwen3-1.7b").reduced()
+    base_cycles = None
+    for stacks in (1, 2, 4):
+        off = DecodeOffload(cfg, channels=16, stacks=stacks,
+                            placement="balanced")
+        for _ in range(2):
+            rec = off.step(4)
+        assert rec.reuse_bytes == off.weight_bytes   # amortized
+        base_cycles = base_cycles or rec.pim_cycles
+        # stack-restricted ops keep the per-stack decomposition: the
+        # serialized decode step costs the same cycles at any stack count
+        assert rec.pim_cycles == base_cycles, (stacks, rec.pim_cycles)
+        roof = off.roofline()
+        assert roof["host_link_bytes"] == 0          # home-stack locality
+        ups = roof["upload_bytes_per_stack"] or [off.upload_bytes]
+        rows.append((f"cluster/decode_{cfg.name}_{stacks}stack", 0.0,
+                     f"pim_s={rec.pim_s:.2e} h2d={rec.h2d_bytes} "
+                     f"upload_per_stack={'/'.join(map(str, ups))} "
+                     f"link_bytes={roof['host_link_bytes']}"))
+    LAST_CLUSTER_METRICS["decode_step_cycles"] = base_cycles
+    return rows
+
 
 def engine_bench() -> List[Row]:
     """Fast-path microbench: the PR-over-PR perf trajectory of the harness
@@ -408,4 +511,5 @@ ALL = {
     "channels": channel_sweep,
     "residency": residency_sweep,
     "engine": engine_bench,
+    "cluster": cluster_sweep,
 }

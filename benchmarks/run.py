@@ -2,8 +2,9 @@
 multi-pseudo-channel scaling sweep (``channels``), the operand-residency /
 serve-offload sweep (``residency`` — also writes the
 ``results/dryrun/*.pim_offload.json`` BENCH artifact), the fast-path
-microbench (``engine``), the roofline summary (from dry-run artifacts, if
-present), and kernel micro-checks.
+microbench (``engine``), the multi-stack cluster scaling sweep
+(``cluster`` — makespan parity + scaling-efficiency gates), the roofline
+summary (from dry-run artifacts, if present), and kernel micro-checks.
 
 Prints ``name,us_per_call,derived`` CSV and writes
 ``results/BENCH_runtime.json`` — harness wall-clock per section plus the
@@ -16,6 +17,7 @@ trajectory of the harness itself is tracked across PRs (CI's
   PYTHONPATH=src python -m benchmarks.run channels   # scaling sweep
   PYTHONPATH=src python -m benchmarks.run residency  # resident operands
   PYTHONPATH=src python -m benchmarks.run engine     # fast-path gates
+  PYTHONPATH=src python -m benchmarks.run cluster    # multi-stack scaling
 """
 from __future__ import annotations
 
@@ -79,15 +81,17 @@ def write_bench_runtime(section_s: dict) -> None:
     refreshes only its own sections and never wipes the engine metrics
     the artifact exists to track across PRs.
     """
-    from benchmarks.paper_figures import LAST_ENGINE_METRICS
+    from benchmarks.paper_figures import LAST_CLUSTER_METRICS, \
+        LAST_ENGINE_METRICS
     BENCH_RUNTIME.parent.mkdir(parents=True, exist_ok=True)
     rec = {"generated_by": "benchmarks.run", "section_wall_s": {},
-           "engine": {}}
+           "engine": {}, "cluster": {}}
     if BENCH_RUNTIME.exists():
         try:
             prev = json.load(open(BENCH_RUNTIME))
             rec["section_wall_s"] = prev.get("section_wall_s", {})
             rec["engine"] = prev.get("engine", {})
+            rec["cluster"] = prev.get("cluster", {})
         except (OSError, ValueError):
             pass
     rec["section_wall_s"].update(
@@ -96,6 +100,8 @@ def write_bench_runtime(section_s: dict) -> None:
     # wipe previously recorded trajectory keys
     rec["engine"].update({k: round(v, 6)
                           for k, v in LAST_ENGINE_METRICS.items()})
+    rec["cluster"].update({k: round(v, 6)
+                           for k, v in LAST_CLUSTER_METRICS.items()})
     with open(BENCH_RUNTIME, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
         f.write("\n")

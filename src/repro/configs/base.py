@@ -53,6 +53,13 @@ class HybridConfig:                 # Zamba2: shared attention block
     lora_rank: int = 64             # per-application LoRA on the shared block
 
 
+#: tensor-parallel modes whose mesh posture is output-dim sharding with
+#: no partial sums across 'model' (the paper's reduction-free dataflow;
+#: 'ame_pim' shares it and adds the PIM cluster stack map) — consulted by
+#: sharding.rules and models.layers so the two cannot drift
+OUTPUT_SHARDED_TP_MODES = ("allgather", "ame_pim")
+
+
 @dataclasses.dataclass(frozen=True)
 class Policy:
     """Numerics + distribution policy (per arch, overridable per run)."""
@@ -71,6 +78,8 @@ class Policy:
     tp_mode: str = "allreduce"      # 'allreduce' (megatron) | 'allgather'
                                     # ('allgather' = the paper's reduction-free
                                     #  dataflow at mesh level, DESIGN.md §3)
+                                    # | 'ame_pim' (allgather specs + PIM
+                                    #  cluster stack map, sharding.rules)
     grad_compression: bool = False  # bf16+error-feedback cross-pod grad sync
 
 

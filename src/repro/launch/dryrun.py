@@ -105,7 +105,7 @@ def main(argv=None):
                                                          "both"])
     ap.add_argument("--all", action="store_true")
     ap.add_argument("--tp-mode", default=None,
-                    choices=[None, "allreduce", "allgather"])
+                    choices=[None, "allreduce", "allgather", "ame_pim"])
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args(argv)
 

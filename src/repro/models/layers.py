@@ -108,14 +108,16 @@ def mlp_init(key, d: int, d_ff: int, act: str, dtype):
 def out_constrain(y, policy):
     """Block-output sharding per TP dataflow:
 
-    * allgather (the paper's reduction-free dataflow): stay feature-sharded
+    * allgather (the paper's reduction-free dataflow) and ame_pim (the
+      PIM-cluster flavor sharing its mesh posture): stay feature-sharded
       on 'model' — no partial-sum reduction exists on the model axis.
     * allreduce + SP: constrain straight to the seq-sharded residual layout
       so SPMD emits a reduce-scatter (S link bytes) instead of all-reduce
       (2S) followed by a slice.
     * allreduce: replicate => the Megatron all-reduce.
     """
-    if policy.tp_mode == "allgather":
+    from repro.configs.base import OUTPUT_SHARDED_TP_MODES
+    if policy.tp_mode in OUTPUT_SHARDED_TP_MODES:
         return constrain(y, "batch", None, "model")
     if policy.sp and policy.sp_rs and y.ndim == 3 and y.shape[1] > 1:
         return constrain(y, "batch", "model", None)

@@ -7,9 +7,13 @@ pseudo-channel) -> **this runtime** (multi-pseudo-channel stack).  See
 
   device     — PIMStack / PIMDevice: 16 pseudo-channels, each an
                independent AMEEngine + host<->PIM transfer accounting
-               + per-channel operand-residency tables
+               + per-channel operand-residency tables (optionally
+               capacity-bounded with LRU spill)
+  cluster    — PIMCluster: N stacks behind one scheduler and one shared
+               host link; inter-stack traffic charged at link bandwidth
   placement  — pluggable data-placement policies (row-striped, 2d-block,
-               AMD-style balanced) + operand-footprint boxes
+               AMD-style balanced) + operand-footprint boxes + the
+               leading stack axis of cluster decompositions
   residency  — DeviceTensor handles: operands/outputs resident per
                channel, zero h2d on reuse (PIMRuntime.place)
   scheduler  — PIMRuntime: partitions GEMM/GEMV/element-wise ops per the
@@ -19,6 +23,13 @@ pseudo-channel) -> **this runtime** (multi-pseudo-channel stack).  See
   trace      — HBM-PIMulator-compatible command-trace emitter + parser
                (resident reuses round-trip as replay-neutral comments)
 """
+from repro.runtime.cluster import (
+    HOST_LINK_BANDWIDTH_BYTES_PER_S,
+    HOST_LINK_BYTES_PER_CYCLE,
+    HostLinkLedger,
+    PIMCluster,
+    host_link_cycles,
+)
 from repro.runtime.device import (
     CHANNEL_BANDWIDTH_BYTES_PER_S,
     PIMDevice,
@@ -32,10 +43,12 @@ from repro.runtime.placement import (
     balanced,
     block_2d,
     box_contains,
+    cluster_shards,
     get_placement,
     placement_shards,
     row_striped,
     shard_mac_passes,
+    stack_restricted_shards,
     validate_cover,
 )
 from repro.runtime.residency import BYTES_PER_ELEM, DeviceTensor, box_bytes
@@ -50,11 +63,13 @@ from repro.runtime.scheduler import (
 from repro.runtime.trace import TraceStats, dump_trace, emit_trace, parse_trace
 
 __all__ = [
+    "HOST_LINK_BANDWIDTH_BYTES_PER_S", "HOST_LINK_BYTES_PER_CYCLE",
+    "HostLinkLedger", "PIMCluster", "host_link_cycles",
     "CHANNEL_BANDWIDTH_BYTES_PER_S", "PIMDevice", "PIMStack",
     "TRANSFER_BYTES_PER_COMMAND", "transfer_cycles",
     "PLACEMENTS", "Shard", "balanced", "block_2d", "box_contains",
-    "get_placement", "placement_shards", "row_striped", "shard_mac_passes",
-    "validate_cover",
+    "cluster_shards", "get_placement", "placement_shards", "row_striped",
+    "shard_mac_passes", "stack_restricted_shards", "validate_cover",
     "BYTES_PER_ELEM", "DeviceTensor", "box_bytes",
     "ENGINE_MODES", "ChannelReport", "PIMRuntime", "RuntimeReport",
     "pim_gemm", "pim_gemv",

@@ -1,0 +1,160 @@
+"""Multi-stack PIM cluster: N HBM-PIM stacks behind one host link.
+
+The paper evaluates one pseudo-channel; :class:`~repro.runtime.device.
+PIMStack` scaled that to 16.  The next seam up — the ROADMAP's
+"multi-stack sharding" item — is several stacks behind one
+:class:`~repro.runtime.scheduler.PIMRuntime`, and what changes there is
+not compute but *data movement*: AMD's balanced-placement study and the
+PrIM benchmarking work both show cross-device traffic and placement, not
+per-unit throughput, decide whether multi-device PIM scales.
+
+:class:`PIMCluster` therefore adds exactly one piece of hardware to the
+model: the **shared host link** every stack's DRAM traffic converges on
+(the CPU-side interconnect — PCIe-class, nothing like per-stack HBM
+bandwidth).  Addressing grows a leading stack axis — ``(stack, channel)``
+— with a *flat* view (``cluster[stack * C + channel]``) so the scheduler
+and residency layers index devices uniformly; devices carry their flat id
+(:class:`PIMStack` with ``stack_id``), so ledgers and traces stay
+unambiguous.
+
+The host-link ledger charges only traffic that exists *because* data
+crosses stack boundaries — a single-stack cluster is byte-identical
+(ledgers and traces) to a bare stack:
+
+* **cross-stack operand movement** — an operand box shipped h2d to
+  channels of more than one stack within one op (or one ``place``):
+  every copy beyond the first stack's crosses the link;
+* **K-split partial drains** — a reduction group whose partials come
+  from more than one stack must converge at the host over the link;
+  every partial from a non-home stack (home = the stack of the group's
+  first-dispatched shard) charges its d2h bytes on the link.
+
+Link time is charged at :data:`HOST_LINK_BYTES_PER_CYCLE` (32 GB/s at
+the 250 MHz PIM clock — PCIe-gen4-x16-class) and reported separately
+from per-channel busy time: the channel makespan keeps its meaning
+(fixed-total-channel reshapes stay makespan-parity), and
+``RuntimeReport.cluster_makespan_cycles`` folds the link in as a second
+serialization axis.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Iterator, List, Optional, Tuple
+
+from repro.core.isa import PIM_FREQ_HZ, PSEUDO_CHANNELS
+from repro.runtime.device import PIMDevice, PIMStack
+
+#: host-link bytes per PIM cycle: 32 GB/s shared link at 250 MHz —
+#: PCIe-gen4-x16-class, 4x one pseudo-channel's 32 B/cycle command bus
+HOST_LINK_BYTES_PER_CYCLE = 128
+
+#: the link bandwidth that implies
+HOST_LINK_BANDWIDTH_BYTES_PER_S = HOST_LINK_BYTES_PER_CYCLE * PIM_FREQ_HZ
+
+
+def host_link_cycles(nbytes: int) -> int:
+    """PIM-clock cycles ``nbytes`` occupies the shared host link."""
+    return math.ceil(nbytes / HOST_LINK_BYTES_PER_CYCLE)
+
+
+@dataclasses.dataclass
+class HostLinkLedger:
+    """Inter-stack traffic over the cluster's shared host link.
+
+    ``events`` keeps (kind, nbytes) in charge order — ``"xstack"`` for
+    cross-stack operand movement, ``"drain"`` for cross-stack K-split
+    partial gathers — and is what the trace emitter serializes as
+    ``# HOSTLINK`` marker lines.
+    """
+
+    bytes: int = 0
+    cycles: int = 0
+    events: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+
+    def charge(self, kind: str, nbytes: int) -> int:
+        assert kind in ("xstack", "drain"), kind
+        cyc = host_link_cycles(nbytes)
+        self.bytes += nbytes
+        self.cycles += cyc
+        self.events.append((kind, nbytes))
+        return cyc
+
+
+class PIMCluster:
+    """N :class:`PIMStack`\\ s behind one scheduler and one host link.
+
+    Quacks like a stack for the flat parts — ``len`` is the total channel
+    count, ``cluster[flat]`` and iteration reach every device in
+    ``(stack, channel)`` order — so :class:`~repro.runtime.residency.
+    DeviceTensor` and the scheduler's ledger walks run unchanged.  The
+    stack axis is explicit where it matters: :meth:`device` addresses by
+    ``(stack, channel)``, :meth:`stack_of` recovers a flat id's stack,
+    and :attr:`link` is the shared host-link ledger.
+    """
+
+    def __init__(self, stacks: int = 1, channels: int = PSEUDO_CHANNELS,
+                 capacity_bytes: Optional[int] = None):
+        assert stacks >= 1, "a cluster has at least one stack"
+        self.channels_per_stack = channels
+        self.stacks = [PIMStack(channels, stack_id=s,
+                                capacity_bytes=capacity_bytes)
+                       for s in range(stacks)]
+        self.link = HostLinkLedger()
+
+    # -- addressing ----------------------------------------------------------
+
+    @property
+    def n_stacks(self) -> int:
+        return len(self.stacks)
+
+    def __len__(self) -> int:
+        return self.n_stacks * self.channels_per_stack
+
+    def __getitem__(self, flat: int) -> PIMDevice:
+        s, c = divmod(flat, self.channels_per_stack)
+        return self.stacks[s].devices[c]
+
+    def __iter__(self) -> Iterator[PIMDevice]:
+        return itertools.chain.from_iterable(
+            s.devices for s in self.stacks)
+
+    def device(self, stack: int, channel: int) -> PIMDevice:
+        """The device at explicit ``(stack, channel)`` coordinates."""
+        return self.stacks[stack].devices[channel]
+
+    def stack_of(self, flat: int) -> int:
+        """Stack index owning flat channel id ``flat``."""
+        return flat // self.channels_per_stack
+
+    def flat(self, stack: int, channel: int) -> int:
+        """Flat channel id of ``(stack, channel)``."""
+        return stack * self.channels_per_stack + channel
+
+    # -- aggregates (mirror PIMStack's) --------------------------------------
+
+    @property
+    def total_flops(self) -> int:
+        return sum(s.total_flops for s in self.stacks)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(s.total_bytes for s in self.stacks)
+
+    @property
+    def resident_bytes(self) -> int:
+        return sum(s.resident_bytes for s in self.stacks)
+
+    @property
+    def spill_bytes(self) -> int:
+        return sum(s.spill_bytes for s in self.stacks)
+
+    @property
+    def busy_cycles(self) -> float:
+        """Sum of per-channel busy time across stacks (NOT wall-clock)."""
+        return sum(s.busy_cycles for s in self.stacks)
+
+    def reset(self) -> None:
+        cap = self.stacks[0].capacity_bytes
+        self.__init__(self.n_stacks, self.channels_per_stack, cap)

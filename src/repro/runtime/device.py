@@ -16,13 +16,23 @@ scaling as future work; this module is that missing layer:
   sum) live in :mod:`repro.runtime.scheduler`, which owns dispatch order.
 
 Channels do not share PIM-visible state: all cross-channel data movement goes
-through the host and is accounted as transfers.
+through the host and is accounted as transfers.  Multiple stacks behind one
+host link are :class:`repro.runtime.cluster.PIMCluster`; a stack constructed
+with ``stack_id=s`` numbers its devices with *cluster-flat* channel ids
+(``s * channels + local``) so ledgers, reports, and traces stay unambiguous
+across the cluster.
+
+Residency capacity: ``capacity_bytes`` bounds the per-channel residency
+table (default ``None`` = unbounded, today's behavior).  Adding a resident
+region past the bound evicts least-recently-used *tensors* first; evicted
+bytes are counted as ``spill_bytes`` (the re-ship exposure) and the actual
+re-transfer is charged naturally when the evicted operand next misses.
 """
 from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Dict, Iterator, List, Tuple
+from typing import Dict, Iterator, List, Optional, Set, Tuple
 
 from repro.core.engine import AMEEngine
 from repro.core.isa import PIM_FREQ_HZ, PSEUDO_CHANNELS
@@ -80,6 +90,7 @@ class DeviceSnapshot:
     d2h_cycles: int
     reuse_bytes: int = 0
     dedupe_bytes: int = 0
+    spill_bytes: int = 0
 
 
 class PIMDevice:
@@ -95,8 +106,10 @@ class PIMDevice:
     of both paths so mixed use stays consistent.
     """
 
-    def __init__(self, channel_id: int):
+    def __init__(self, channel_id: int,
+                 capacity_bytes: Optional[int] = None):
         self.channel_id = channel_id
+        self.capacity_bytes = capacity_bytes
         self.engine = AMEEngine()
         self.xfer = TransferLedger()
         self.events: List[Tuple[str, object]] = []
@@ -106,9 +119,16 @@ class PIMDevice:
         # operand residency: tensor uid -> resident 2D boxes (r0, r1, c0, c1)
         # in that tensor's own coordinates.  Owned by the scheduler /
         # repro.runtime.residency; the device just stores and queries.
+        # Dict insertion order doubles as the LRU order (oldest first);
+        # _touch moves a uid to the back on every hit.
         self.resident: Dict[int, List[Tuple[int, int, int, int]]] = {}
+        # uids that must not be evicted: kept outputs whose d2h drain is
+        # still pending — on hardware, spilling them would lose the only
+        # copy of the result.  Unpinned when the handle drains/evicts.
+        self.pinned: Set[int] = set()
         self.reuse_bytes = 0    # h2d avoided by cross-op operand residency
         self.dedupe_bytes = 0   # h2d avoided by within-op slice dedupe
+        self.spill_bytes = 0    # resident bytes evicted under capacity
 
     # -- compute ledger ------------------------------------------------------
 
@@ -170,20 +190,76 @@ class PIMDevice:
 
     # -- residency table -----------------------------------------------------
 
+    def _touch(self, uid: int) -> None:
+        """Move ``uid`` to the most-recently-used end of the LRU order."""
+        boxes = self.resident.pop(uid)
+        self.resident[uid] = boxes
+
     def add_resident(self, uid: int,
-                     box: Tuple[int, int, int, int]) -> None:
-        """Record that ``box`` of tensor ``uid`` now lives on this channel."""
+                     box: Tuple[int, int, int, int],
+                     pin: bool = False) -> bool:
+        """Record that ``box`` of tensor ``uid`` now lives on this channel.
+
+        Under a ``capacity_bytes`` bound, least-recently-used *other*
+        unpinned tensors are evicted first (their bytes counted as spill
+        and marked in the event stream); a box that cannot fit even alone
+        — or cannot fit without evicting pinned (undrained-output) data —
+        is not recorded at all (streamed through, re-shipped next use).
+        ``pin=True`` additionally pins ``uid`` (kept outputs awaiting
+        their deferred d2h).  Returns whether the box is now resident.
+        """
+        nbytes = box_bytes(box)
+        cap = self.capacity_bytes
+        if cap is not None:
+            if nbytes > cap:
+                return False
+            need = self.resident_bytes + nbytes - cap
+            # refuse before evicting anything if eviction cannot free
+            # enough (pinned data never counts) — a doomed insert must
+            # not cost other tensors their residency
+            if need > 0:
+                evictable = sum(self.resident_bytes_of(u)
+                                for u in self.resident
+                                if u not in self.pinned)
+                if evictable < need:
+                    return False
+            while self.resident_bytes + nbytes > cap:
+                # oldest other unpinned tensor first; the incoming uid's
+                # own older boxes only as a last resort; never pinned data
+                victim = next((u for u in self.resident
+                               if u != uid and u not in self.pinned), uid)
+                self._spill(victim)
         self.resident.setdefault(uid, []).append(box)
+        if pin:
+            self.pinned.add(uid)
+        self._touch(uid)
+        return True
+
+    def unpin(self, uid: int) -> None:
+        """Make ``uid`` evictable again (its pending outputs drained)."""
+        self.pinned.discard(uid)
+
+    def _spill(self, uid: int) -> None:
+        """Evict tensor ``uid``: count its bytes as spill (the re-ship the
+        next miss will charge) and mark the trace."""
+        nbytes = self.resident_bytes_of(uid)
+        self.resident.pop(uid, None)
+        self.spill_bytes += nbytes
+        self.events.append(("spill", nbytes))
 
     def has_resident(self, uid: int,
                      box: Tuple[int, int, int, int]) -> bool:
         """True if ``box`` is contained in a resident region of ``uid``."""
-        return any(box_contains(b, box)
-                   for b in self.resident.get(uid, ()))
+        hit = any(box_contains(b, box)
+                  for b in self.resident.get(uid, ()))
+        if hit:
+            self._touch(uid)
+        return hit
 
     def drop_resident(self, uid: int) -> None:
         """Forget all of tensor ``uid``'s regions (eviction, no traffic)."""
         self.resident.pop(uid, None)
+        self.pinned.discard(uid)
 
     def resident_bytes_of(self, uid: int) -> int:
         """Bytes of tensor ``uid`` resident on this channel."""
@@ -203,16 +279,28 @@ class PIMDevice:
             commands=self.compute_commands,
             h2d_bytes=self.xfer.h2d_bytes, d2h_bytes=self.xfer.d2h_bytes,
             h2d_cycles=self.xfer.h2d_cycles, d2h_cycles=self.xfer.d2h_cycles,
-            reuse_bytes=self.reuse_bytes, dedupe_bytes=self.dedupe_bytes)
+            reuse_bytes=self.reuse_bytes, dedupe_bytes=self.dedupe_bytes,
+            spill_bytes=self.spill_bytes)
 
 
 class PIMStack:
-    """An HBM-PIM stack: up to 16 independent pseudo-channels."""
+    """An HBM-PIM stack: up to 16 independent pseudo-channels.
 
-    def __init__(self, channels: int = PSEUDO_CHANNELS):
+    ``stack_id`` places the stack inside a :class:`~repro.runtime.cluster.
+    PIMCluster`: devices are numbered with cluster-flat channel ids
+    (``stack_id * channels + local``) while ``__getitem__`` stays local
+    (0-based within the stack).  A bare stack (``stack_id=0``) numbers
+    devices 0..channels-1 exactly as before.
+    """
+
+    def __init__(self, channels: int = PSEUDO_CHANNELS, stack_id: int = 0,
+                 capacity_bytes: Optional[int] = None):
         assert 1 <= channels <= PSEUDO_CHANNELS, \
             f"a stack has at most {PSEUDO_CHANNELS} pseudo-channels"
-        self.devices = [PIMDevice(i) for i in range(channels)]
+        self.stack_id = stack_id
+        self.capacity_bytes = capacity_bytes
+        self.devices = [PIMDevice(stack_id * channels + i, capacity_bytes)
+                        for i in range(channels)]
 
     def __len__(self) -> int:
         return len(self.devices)
@@ -243,5 +331,9 @@ class PIMStack:
         return sum(d.compute_cycles + d.xfer.total_cycles
                    for d in self.devices)
 
+    @property
+    def spill_bytes(self) -> int:
+        return sum(d.spill_bytes for d in self.devices)
+
     def reset(self) -> None:
-        self.__init__(len(self.devices))
+        self.__init__(len(self.devices), self.stack_id, self.capacity_bytes)

@@ -36,7 +36,13 @@ from repro.core.isa import AAM_BLOCKS, ROWNUM
 
 @dataclasses.dataclass(frozen=True)
 class Shard:
-    """One channel's axis-aligned box of the (M, K, N) iteration space."""
+    """One channel's axis-aligned box of the (M, K, N) iteration space.
+
+    ``stack`` is the leading placement axis of a multi-stack cluster
+    (``channel`` is then local to that stack); bare single-stack
+    decompositions keep the default ``stack=0`` with cluster-flat ==
+    local channel ids, so every pre-cluster call site is unchanged.
+    """
 
     channel: int
     m0: int
@@ -45,6 +51,7 @@ class Shard:
     k1: int
     n0: int
     n1: int
+    stack: int = 0
 
     @property
     def rows(self) -> int:
@@ -240,3 +247,34 @@ def placement_shards(policy: str, m: int, k: int, n: int,
     shards = tuple(get_placement(policy)(m, k, n, channels))
     validate_cover(list(shards), m, k, n)
     return shards
+
+
+@functools.lru_cache(maxsize=4096)
+def cluster_shards(policy: str, m: int, k: int, n: int, stacks: int,
+                   channels_per_stack: int) -> Tuple[Shard, ...]:
+    """Memoized ``(stack, channel)`` decomposition across a cluster.
+
+    The placement policy runs over the *flat* channel space
+    (``stacks * channels_per_stack`` — so a reshape of the same total
+    channel count produces the identical shard geometry, hence makespan
+    parity), then each flat channel id splits into the leading stack
+    axis: contiguous channel runs map to contiguous stacks.  Which boxes
+    land with channels of *different* stacks is exactly what the
+    scheduler's host-link ledger charges.
+    """
+    flat = placement_shards(policy, m, k, n, stacks * channels_per_stack)
+    return tuple(dataclasses.replace(
+        s, stack=s.channel // channels_per_stack,
+        channel=s.channel % channels_per_stack) for s in flat)
+
+
+@functools.lru_cache(maxsize=4096)
+def stack_restricted_shards(policy: str, m: int, k: int, n: int,
+                            stack: int,
+                            channels_per_stack: int) -> Tuple[Shard, ...]:
+    """Memoized decomposition of one op onto a *single* stack of a
+    cluster (the decode-offload regime: each layer's weights live on
+    their home stack, re-decomposed every step).  Channel ids are local
+    to ``stack``."""
+    flat = placement_shards(policy, m, k, n, channels_per_stack)
+    return tuple(dataclasses.replace(s, stack=stack) for s in flat)

@@ -46,7 +46,9 @@ _uid = itertools.count(1)
 
 
 class DeviceTensor:
-    """A 2D tensor with per-channel shard residency on a :class:`PIMStack`.
+    """A 2D tensor with per-channel shard residency on a :class:`PIMStack`
+    (or a :class:`~repro.runtime.cluster.PIMCluster`, addressed through
+    its flat channel view — residency tables are per-device either way).
 
     ``values`` is the host mirror (FP16) that execute-mode engines compute
     from — residency changes *accounting*, never numerics.  ``values`` is
@@ -68,7 +70,10 @@ class DeviceTensor:
 
     def __init__(self, stack: PIMStack, shape: Tuple[int, int],
                  values: Optional[np.ndarray] = None, copy: bool = True):
-        assert len(shape) == 2, shape
+        if len(shape) != 2:
+            raise ValueError(
+                f"DeviceTensor models 2D operands; got shape {shape} — "
+                f"reshape/flatten to (rows, cols) before placing")
         self.uid = next(_uid)
         self.stack = stack
         self.shape = tuple(shape)
@@ -85,8 +90,15 @@ class DeviceTensor:
     def is_resident(self, channel: int, box: Box) -> bool:
         return self.stack[channel].has_resident(self.uid, box)
 
-    def mark_resident(self, channel: int, box: Box) -> None:
-        self.stack[channel].add_resident(self.uid, box)
+    def mark_resident(self, channel: int, box: Box,
+                      pin: bool = False) -> bool:
+        """Record residency; under a device capacity bound the device may
+        refuse (box streamed, not resident) or evict LRU tensors first.
+        ``pin=True`` protects the region from eviction until
+        :meth:`to_host` drains it (kept outputs — the only copy of a
+        result lives on-channel until then).  Returns whether the box is
+        now resident."""
+        return self.stack[channel].add_resident(self.uid, box, pin=pin)
 
     @property
     def resident_bytes(self) -> int:
@@ -98,9 +110,12 @@ class DeviceTensor:
 
     def to_host(self) -> Optional[jnp.ndarray]:
         """Drain pending output shards (charged as d2h) and return the
-        host array (``None`` for analytic handles)."""
+        host array (``None`` for analytic handles).  Drained regions
+        become evictable again (unpinned)."""
         for channel, box in self.pending_d2h:
-            self.stack[channel].pim_to_host(box_bytes(box))
+            dev = self.stack[channel]
+            dev.pim_to_host(box_bytes(box))
+            dev.unpin(self.uid)
         self.pending_d2h = []
         return jnp.asarray(self.values) if self.values is not None else None
 

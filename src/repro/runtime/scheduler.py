@@ -15,6 +15,21 @@ host<->PIM traffic dominates unless overlapped):
 where ``lead_in`` is the transfer time of the channel's *first* operand
 tile pair (nothing to overlap with yet), the remaining input traffic
 streams behind compute, and results drain after the last PEP retires.
+``PIMRuntime(overlap=False)`` switches to the synchronous-DMA comparison
+model instead: ``busy = h2d + compute + d2h`` — nothing overlaps, the
+PrIM-style worst case (identical ledgers, only busy time differs).
+
+The runtime drives either one :class:`PIMStack` or a multi-stack
+:class:`~repro.runtime.cluster.PIMCluster` (``PIMRuntime(stacks=N)``).
+Placement then grows a leading stack axis — flat-channel geometry is
+unchanged at fixed total channels (makespan parity) — and traffic that
+crosses stacks is additionally charged on the cluster's shared host
+link: operand boxes shipped to more than one stack within an op, and
+K-split partial drains whose reduction group spans stacks.  Per-op
+``stack=`` restricts the decomposition to one stack (the decode-offload
+regime: each layer's weights live on their home stack).  Single-stack
+runs never touch the link — their ledgers and traces are byte-identical
+to a bare stack.
 
 Operands may be host arrays (shipped in full every op, the one-shot
 default) or :class:`~repro.runtime.residency.DeviceTensor` handles whose
@@ -72,8 +87,10 @@ from repro.core.engine import (
     gemm_tiles,
 )
 from repro.core.isa import PIM_FREQ_HZ
+from repro.runtime.cluster import PIMCluster
 from repro.runtime.device import PIMDevice, PIMStack, transfer_cycles
-from repro.runtime.placement import placement_shards
+from repro.runtime.placement import Shard, cluster_shards, \
+    placement_shards, stack_restricted_shards
 from repro.runtime.residency import BYTES_PER_ELEM, Box, DeviceTensor, \
     box_bytes
 
@@ -93,7 +110,12 @@ Operand = Union[jnp.ndarray, np.ndarray, DeviceTensor]
 
 @dataclasses.dataclass(frozen=True)
 class ChannelReport:
-    """One pseudo-channel's share of an op."""
+    """One pseudo-channel's share of an op.
+
+    ``channel`` is the cluster-flat id; ``stack`` the owning stack (0 on
+    a bare single stack).  ``overlap=False`` reports the synchronous-DMA
+    busy model (nothing overlaps) instead of the double-buffered default.
+    """
 
     channel: int
     compute_cycles: float
@@ -106,6 +128,9 @@ class ChannelReport:
     lead_in_cycles: int
     reuse_bytes: int = 0    # h2d avoided by cross-op operand residency
     dedupe_bytes: int = 0   # h2d avoided by within-op slice dedupe
+    stack: int = 0          # owning stack (leading placement axis)
+    spill_bytes: int = 0    # residency evicted under a capacity bound
+    overlap: bool = True    # transfer/compute overlap model in effect
 
     @property
     def busy_cycles(self) -> float:
@@ -113,6 +138,8 @@ class ChannelReport:
         if self.compute_cycles == 0 and self.h2d_cycles == 0 \
                 and self.d2h_cycles == 0:
             return 0.0
+        if not self.overlap:           # synchronous DMA: strict sequence
+            return self.h2d_cycles + self.compute_cycles + self.d2h_cycles
         stream = max(self.compute_cycles, self.h2d_cycles
                      - self.lead_in_cycles)
         return self.lead_in_cycles + stream + self.d2h_cycles
@@ -124,17 +151,33 @@ class ChannelReport:
 
 @dataclasses.dataclass(frozen=True)
 class RuntimeReport:
-    """Device-level account of one scheduled op."""
+    """Device-level account of one scheduled op.
+
+    ``stacks`` / ``host_link_bytes`` / ``host_link_cycles`` account the
+    cluster dimension: inter-stack traffic over the shared host link
+    (always 0 on a single stack).  :attr:`makespan_cycles` keeps its
+    per-channel meaning — fixed-total-channel cluster reshapes are
+    makespan-parity — while :attr:`cluster_makespan_cycles` folds the
+    link in as a second serialization axis.
+    """
 
     op: str
     shape: Tuple[int, ...]
     placement: str
-    channels: int                     # pseudo-channels in the stack
+    channels: int                     # pseudo-channels the op decomposed over
     per_channel: Tuple[ChannelReport, ...]
+    stacks: int = 1                   # stacks behind the runtime
+    host_link_bytes: int = 0          # inter-stack bytes over the host link
+    host_link_cycles: int = 0
 
     @property
     def makespan_cycles(self) -> float:
         return max((c.busy_cycles for c in self.per_channel), default=0.0)
+
+    @property
+    def cluster_makespan_cycles(self) -> float:
+        """Makespan with the shared host link as a serialization axis."""
+        return max(self.makespan_cycles, float(self.host_link_cycles))
 
     @property
     def total_flops(self) -> int:
@@ -169,6 +212,12 @@ class RuntimeReport:
         return sum(c.dedupe_bytes for c in self.per_channel)
 
     @property
+    def total_spill_bytes(self) -> int:
+        """Residency bytes evicted under per-channel capacity bounds
+        during this op (the re-ship exposure, not charged traffic)."""
+        return sum(c.spill_bytes for c in self.per_channel)
+
+    @property
     def flop_per_cycle(self) -> float:
         """Effective throughput at makespan (the scaling headline).
 
@@ -196,13 +245,17 @@ class RuntimeReport:
         # min()/max() raising — guarded like flop_per_cycle
         us = self.utilizations() or [0.0]
         busy = [c for c in self.per_channel if c.busy_cycles > 0]
-        return (f"{self.op} {'x'.join(map(str, self.shape))} "
+        line = (f"{self.op} {'x'.join(map(str, self.shape))} "
                 f"[{self.placement}, {self.channels}ch, {len(busy)} busy]: "
                 f"makespan={self.makespan_cycles:.0f}cyc "
                 f"{self.gflops:.1f}GFLOP/s "
                 f"util(min/mean/max)={min(us):.2f}/"
                 f"{sum(us) / len(us):.2f}/{max(us):.2f} "
                 f"bytes={self.total_bytes} reuse={self.total_reuse_bytes}")
+        if self.stacks > 1:           # single-stack summaries are unchanged
+            line += (f" stacks={self.stacks} "
+                     f"link_bytes={self.host_link_bytes}")
+        return line
 
 
 # ---------------------------------------------------------------------------
@@ -223,19 +276,43 @@ def _unwrap(x: Operand, stack: PIMStack
 
 
 class PIMRuntime:
-    """Schedules ops onto a :class:`PIMStack` and accounts them.
+    """Schedules ops onto a :class:`PIMStack` (or a multi-stack
+    :class:`PIMCluster`) and accounts them.
 
     ``engine`` selects the default shard executor: ``"batched"`` (fast,
     whole-shard jit / closed-form analytic) or ``"tiled"`` (the per-tile
     reference).  Both are bit-exact and charge identical ledgers; per-op
     ``engine=`` overrides the default.
+
+    ``stacks > 1`` builds a :class:`PIMCluster` of ``stacks`` x
+    ``channels`` pseudo-channels behind one shared host link; ``stack=``
+    also accepts a pre-built cluster.  ``overlap=False`` switches busy
+    time to the synchronous-DMA model (no transfer/compute overlap);
+    ``capacity_bytes`` bounds each channel's residency table (LRU
+    eviction counted as spill).
     """
 
     def __init__(self, channels: int = 1, stack: Optional[PIMStack] = None,
-                 engine: str = "batched"):
+                 engine: str = "batched", stacks: int = 1,
+                 overlap: bool = True,
+                 capacity_bytes: Optional[int] = None):
         assert engine in ENGINE_MODES, engine
-        self.stack = stack if stack is not None else PIMStack(channels)
+        if stack is not None:
+            if stacks != 1 or capacity_bytes is not None:
+                raise ValueError(
+                    "stacks=/capacity_bytes= configure a runtime-built "
+                    "stack and are ignored with an explicit stack= — "
+                    "build the PIMCluster/PIMStack with them instead")
+            self.stack = stack
+        elif stacks > 1:
+            self.stack = PIMCluster(stacks, channels,
+                                    capacity_bytes=capacity_bytes)
+        else:
+            self.stack = PIMStack(channels, capacity_bytes=capacity_bytes)
         self.engine = engine
+        self.overlap = overlap
+        self._cluster = self.stack if isinstance(self.stack, PIMCluster) \
+            else None
 
     # -- internals -----------------------------------------------------------
 
@@ -244,15 +321,71 @@ class PIMRuntime:
         assert mode in ENGINE_MODES, mode
         return mode
 
+    @property
+    def n_stacks(self) -> int:
+        return self._cluster.n_stacks if self._cluster else 1
+
+    def _shards(self, placement: str, m: int, k: int, n: int,
+                stack: Optional[int]) -> Tuple[Shard, ...]:
+        """Resolve the op's shard decomposition, stack axis included."""
+        if self._cluster is None:
+            if stack is not None:
+                raise ValueError(
+                    "stack= requires a multi-stack runtime "
+                    "(PIMRuntime(stacks=N) or an explicit PIMCluster)")
+            return placement_shards(placement, m, k, n, len(self.stack))
+        cps = self._cluster.channels_per_stack
+        if stack is None:
+            return cluster_shards(placement, m, k, n,
+                                  self._cluster.n_stacks, cps)
+        if not 0 <= stack < self._cluster.n_stacks:
+            raise ValueError(
+                f"stack {stack} out of range for a "
+                f"{self._cluster.n_stacks}-stack cluster")
+        return stack_restricted_shards(placement, m, k, n, stack, cps)
+
+    def _flat(self, s: Shard) -> int:
+        """Cluster-flat channel id of a shard's (stack, channel)."""
+        if self._cluster is None:
+            return s.channel
+        return self._cluster.flat(s.stack, s.channel)
+
+    def _link_charge_ship(self, key, stack_idx: int, nbytes: int,
+                          link_seen: Dict) -> None:
+        """Charge the host link when an operand box crosses stacks: every
+        copy of the same box beyond its first stack's is inter-stack."""
+        if self._cluster is None:
+            return
+        stacks = link_seen.setdefault(key, set())
+        if stacks and stack_idx not in stacks:
+            self._cluster.link.charge("xstack", nbytes)
+        stacks.add(stack_idx)
+
     def _record_instrs(self, dev: PIMDevice, n_before: int) -> None:
         for rec in dev.engine.instrs[n_before:]:
             dev.events.append(("instr", rec))
 
+    def _link_before(self) -> Tuple[int, int]:
+        if self._cluster is None:
+            return (0, 0)
+        return (self._cluster.link.bytes, self._cluster.link.cycles)
+
+    def _op_devices(self, stack: Optional[int]) -> List[PIMDevice]:
+        """Devices participating in an op: one stack's under a ``stack=``
+        restriction, the whole stack/cluster otherwise — so restricted
+        ops snapshot and report only the channels that can do work."""
+        if stack is None or self._cluster is None:
+            return list(self.stack)
+        return self._cluster.stacks[stack].devices
+
     def _finish(self, op: str, shape: Tuple[int, ...], placement: str,
                 before: Dict[int, "object"],
-                lead_in: Dict[int, int]) -> RuntimeReport:
+                lead_in: Dict[int, int],
+                link_before: Tuple[int, int] = (0, 0),
+                devices: Optional[List[PIMDevice]] = None) -> RuntimeReport:
+        devs = list(self.stack) if devices is None else devices
         reports = []
-        for dev in self.stack:
+        for dev in devs:
             b = before[dev.channel_id]
             reports.append(ChannelReport(
                 channel=dev.channel_id,
@@ -265,13 +398,23 @@ class PIMRuntime:
                 d2h_cycles=dev.xfer.d2h_cycles - b.d2h_cycles,
                 lead_in_cycles=lead_in.get(dev.channel_id, 0),
                 reuse_bytes=dev.reuse_bytes - b.reuse_bytes,
-                dedupe_bytes=dev.dedupe_bytes - b.dedupe_bytes))
-        return RuntimeReport(op=op, shape=shape, placement=placement,
-                             channels=len(self.stack),
-                             per_channel=tuple(reports))
+                dedupe_bytes=dev.dedupe_bytes - b.dedupe_bytes,
+                stack=(self._cluster.stack_of(dev.channel_id)
+                       if self._cluster else 0),
+                spill_bytes=dev.spill_bytes - b.spill_bytes,
+                overlap=self.overlap))
+        lb, lc = self._link_before()
+        return RuntimeReport(
+            op=op, shape=shape, placement=placement,
+            channels=len(devs),       # == the decomposition width
+            per_channel=tuple(reports),
+            stacks=self.n_stacks,
+            host_link_bytes=lb - link_before[0],
+            host_link_cycles=lc - link_before[1])
 
     def _ship_in(self, dev: PIMDevice, handle: Optional[DeviceTensor],
-                 box: Box, shipped: Dict[int, Set], role: str) -> bool:
+                 box: Box, shipped: Dict[int, Set], role: str,
+                 link_seen: Optional[Dict] = None) -> bool:
         """Charge one operand shard's h2d unless resident or already
         shipped to this channel within the current op.  Returns whether
         bytes actually moved (for the lead-in computation).
@@ -279,7 +422,10 @@ class PIMRuntime:
         Misses on a handle transfer *and* mark resident, so repeated ops
         converge to zero traffic; plain arrays dedupe only within the op
         (the GEMV x-vector shipped once per channel, not once per K-split
-        shard).
+        shard).  On a cluster, a box that actually moves to channels of
+        more than one stack additionally charges the host link for every
+        stack beyond its first (``link_seen`` tracks per-operand boxes
+        across the op).
         """
         nbytes = box_bytes(box)
         if handle is not None:
@@ -287,6 +433,11 @@ class PIMRuntime:
                 dev.note_reuse(nbytes)
                 return False
             dev.host_to_pim(nbytes)
+            if link_seen is not None:
+                self._link_charge_ship(
+                    (role, handle.uid, box),
+                    self._cluster.stack_of(dev.channel_id), nbytes,
+                    link_seen)
             handle.mark_resident(dev.channel_id, box)
             return True
         seen = shipped.setdefault(dev.channel_id, set())
@@ -295,13 +446,18 @@ class PIMRuntime:
             dev.note_dedupe(nbytes)
             return False
         dev.host_to_pim(nbytes)
+        if link_seen is not None:
+            self._link_charge_ship(
+                (role, None, box),
+                self._cluster.stack_of(dev.channel_id), nbytes, link_seen)
         seen.add(key)
         return True
 
     # -- operand placement (the residency entry point) -----------------------
 
     def place(self, array, *, placement: str = "balanced", role: str = "A",
-              other_dim: int = 1) -> DeviceTensor:
+              other_dim: int = 1,
+              stack: Optional[int] = None) -> DeviceTensor:
         """Upload an array's shards onto the stack; returns a resident
         :class:`DeviceTensor` handle.
 
@@ -314,32 +470,43 @@ class PIMRuntime:
         matching placement geometry charge zero h2d for this operand.
 
         Pass a ``(rows, cols)`` tuple instead of an array for an analytic
-        (shape-only) handle usable with ``execute=False`` sweeps.
+        (shape-only) handle usable with ``execute=False`` sweeps.  On a
+        multi-stack runtime, ``stack=`` pins the whole tensor to one
+        stack (consume it with the same ``stack=`` on ops); the default
+        spreads shards over every stack, charging the host link where a
+        replicated box lands on more than one stack.
         """
         if isinstance(array, tuple):
-            arr, shape = None, array
+            arr, shape = None, tuple(array)
         else:
             arr = np.asarray(array, F16)
             shape = arr.shape
-        assert len(shape) == 2, shape
+        if len(shape) != 2:
+            raise ValueError(
+                f"PIMRuntime.place expects a 2D array or a (rows, cols) "
+                f"shape tuple, got shape {shape} — reshape/flatten to 2D "
+                f"(e.g. arr.reshape(rows, -1)) before placing")
         handle = DeviceTensor(self.stack, shape, values=arr)
         if role == "A":
             m, k = shape
-            shards = placement_shards(placement, m, k, other_dim,
-                                      len(self.stack))
-            boxes = [(s.channel, s.a_box) for s in shards]
+            shards = self._shards(placement, m, k, other_dim, stack)
+            boxes = [(s, s.a_box) for s in shards]
         elif role == "B":
             k, n = shape
-            shards = placement_shards(placement, other_dim, k, n,
-                                      len(self.stack))
-            boxes = [(s.channel, s.b_box) for s in shards]
+            shards = self._shards(placement, other_dim, k, n, stack)
+            boxes = [(s, s.b_box) for s in shards]
         else:
             raise ValueError(f"role must be 'A' or 'B', got {role!r}")
-        for ch, box in boxes:
-            if handle.is_resident(ch, box):    # replicated shard geometry
+        link_seen: Dict = {}
+        for s, box in boxes:
+            flat = self._flat(s)
+            if handle.is_resident(flat, box):    # replicated shard geometry
                 continue
-            self.stack[ch].host_to_pim(box_bytes(box))
-            handle.mark_resident(ch, box)
+            self.stack[flat].host_to_pim(box_bytes(box))
+            if self._cluster is not None:
+                self._link_charge_ship((role, handle.uid, box), s.stack,
+                                       box_bytes(box), link_seen)
+            handle.mark_resident(flat, box)
         return handle
 
     # -- GEMM / GEMV ---------------------------------------------------------
@@ -348,7 +515,8 @@ class PIMRuntime:
              placement: str = "row-striped",
              execute: bool = True,
              keep_output: bool = False,
-             engine: Optional[str] = None
+             engine: Optional[str] = None,
+             stack: Optional[int] = None
              ) -> Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
                         RuntimeReport]:
         """C = A(m,k) @ B(k,n) partitioned across the stack's channels.
@@ -358,7 +526,10 @@ class PIMRuntime:
         resident handle (exact-cover output shards stay on their channels;
         K-split partials still drain for the host reduction) instead of a
         host array.  ``engine`` overrides the runtime's shard executor
-        ("batched"/"tiled") for this op.
+        ("batched"/"tiled") for this op.  On a multi-stack runtime,
+        ``stack=`` restricts the op to one stack's channels; the default
+        decomposes over every stack and charges inter-stack traffic on
+        the host link.
         """
         mode = self._engine_mode(engine)
         ah, a_vals, (m, k) = _unwrap(a, self.stack)
@@ -367,26 +538,36 @@ class PIMRuntime:
         assert not execute or (a_vals is not None and b_vals is not None), \
             "analytic (shape-only) DeviceTensor operands require " \
             "execute=False"
-        shards = placement_shards(placement, m, k, n, len(self.stack))
+        shards = self._shards(placement, m, k, n, stack)
 
-        before = {d.channel_id: d.snapshot() for d in self.stack}
+        op_devs = self._op_devices(stack)
+        before = {d.channel_id: d.snapshot() for d in op_devs}
+        link_before = self._link_before()
         lead_in: Dict[int, int] = {}
         shipped: Dict[int, Set] = {}
+        link_seen: Optional[Dict] = {} if self._cluster else None
         out = np.zeros((m, n), F16) if execute else None
         out_handle = DeviceTensor(self.stack, (m, n), values=out,
                                   copy=False) if keep_output else None
         partials: Dict[Tuple[int, int, int, int],
                        List[Tuple[int, np.ndarray]]] = {}
+        # K-split reduction groups: out_box -> [(stack, drained bytes)] in
+        # dispatch order, for the cross-stack host-link gather charge
+        drain_groups: Dict[Tuple[int, int, int, int],
+                           List[Tuple[int, int]]] = {}
 
         for s in shards:
-            dev = self.stack[s.channel]
-            a_ships = self._ship_in(dev, ah, s.a_box, shipped, "A")
-            b_ships = self._ship_in(dev, bh, s.b_box, shipped, "B")
-            if s.channel not in lead_in:
+            flat = self._flat(s)
+            dev = self.stack[flat]
+            a_ships = self._ship_in(dev, ah, s.a_box, shipped, "A",
+                                    link_seen)
+            b_ships = self._ship_in(dev, bh, s.b_box, shipped, "B",
+                                    link_seen)
+            if flat not in lead_in:
                 i0, i1, j0, j1, c0, c1 = next(gemm_tiles(s.rows, s.ks, s.ns))
                 first = ((i1 - i0) * (c1 - c0) if a_ships else 0) \
                     + ((c1 - c0) * (j1 - j0) if b_ships else 0)
-                lead_in[s.channel] = transfer_cycles(first * BYTES_PER_ELEM)
+                lead_in[flat] = transfer_cycles(first * BYTES_PER_ELEM)
             if execute:
                 n_before = len(dev.engine.instrs)
                 run = gemm_on_engine_batched if mode == "batched" \
@@ -413,11 +594,30 @@ class PIMRuntime:
                     dev.events.append(
                         ("instr",
                          InstrRecord("mac", i1 - i0, c1 - c0, j1 - j0)))
-            if keep_output and not s.is_partial(k):
-                out_handle.mark_resident(s.channel, s.out_box)
-                out_handle.pending_d2h.append((s.channel, s.out_box))
+            # an output shard stays on-channel only if residency actually
+            # records it (a capacity bound may refuse); otherwise it
+            # drains now like any result, so ledger and trace stay
+            # consistent with what the host really received
+            kept = keep_output and not s.is_partial(k) \
+                and out_handle.mark_resident(flat, s.out_box, pin=True)
+            if kept:
+                out_handle.pending_d2h.append((flat, s.out_box))
             else:
-                dev.pim_to_host(s.rows * s.ns * BYTES_PER_ELEM)  # C / partial
+                drained = s.rows * s.ns * BYTES_PER_ELEM   # C / partial
+                dev.pim_to_host(drained)
+                if s.is_partial(k) and self._cluster is not None:
+                    drain_groups.setdefault(s.out_box, []) \
+                        .append((s.stack, drained))
+
+        # K-split reduction groups spanning stacks gather their partials
+        # over the shared host link: every partial from a non-home stack
+        # (home = the group's first-dispatched shard's stack) crosses it
+        if self._cluster is not None:
+            for parts in drain_groups.values():
+                home = parts[0][0]
+                for st, nbytes in parts:
+                    if st != home:
+                        self._cluster.link.charge("drain", nbytes)
 
         if execute:
             # host-side reduction of K-split partials, ascending-k FP16
@@ -427,7 +627,9 @@ class PIMRuntime:
                     acc = arr if acc is None else (acc + arr).astype(F16)
                 out[m0:m1, n0:n1] = acc
 
-        report = self._finish("gemm", (m, k, n), placement, before, lead_in)
+        report = self._finish("gemm", (m, k, n), placement, before,
+                              lead_in, link_before=link_before,
+                              devices=op_devs)
         if keep_output:
             return out_handle, report
         return (jnp.asarray(out) if execute else None), report
@@ -435,7 +637,8 @@ class PIMRuntime:
     def gemv(self, a: Operand, x: jnp.ndarray, *,
              placement: str = "row-striped",
              execute: bool = True,
-             engine: Optional[str] = None
+             engine: Optional[str] = None,
+             stack: Optional[int] = None
              ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
         """y = A @ x (the MPC-Wrapper comparison workload), as N=1 GEMM.
 
@@ -447,7 +650,7 @@ class PIMRuntime:
             "gemv x must be a host vector; place A instead"
         y, rep = self.gemm(a, np.asarray(x, F16)[:, None],
                            placement=placement, execute=execute,
-                           engine=engine)
+                           engine=engine, stack=stack)
         rep = dataclasses.replace(rep, op="gemv")
         return (y[:, 0] if y is not None else None), rep
 
@@ -457,7 +660,8 @@ class PIMRuntime:
                     placement: str = "row-striped",
                     execute: bool = True,
                     keep_output: bool = False,
-                    engine: Optional[str] = None
+                    engine: Optional[str] = None,
+                    stack: Optional[int] = None
                     ) -> Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
                                RuntimeReport]:
         """out = a <kind> b partitioned over the (M, C) output grid.
@@ -480,25 +684,31 @@ class PIMRuntime:
         assert not execute or (a_vals is not None and b_vals is not None), \
             "analytic (shape-only) DeviceTensor operands require " \
             "execute=False"
-        shards = placement_shards(placement, m, c, 1, len(self.stack))
+        shards = self._shards(placement, m, c, 1, stack)
 
-        before = {d.channel_id: d.snapshot() for d in self.stack}
+        op_devs = self._op_devices(stack)
+        before = {d.channel_id: d.snapshot() for d in op_devs}
+        link_before = self._link_before()
         lead_in: Dict[int, int] = {}
         shipped: Dict[int, Set] = {}
+        link_seen: Optional[Dict] = {} if self._cluster else None
         out = np.zeros((m, c), F16) if execute else None
         out_handle = DeviceTensor(self.stack, (m, c), values=out,
                                   copy=False) if keep_output else None
 
         for s in shards:
-            dev = self.stack[s.channel]
+            flat = self._flat(s)
+            dev = self.stack[flat]
             # both operands use the (m, col) footprint: C sits in the K slot
-            a_ships = self._ship_in(dev, ah, s.a_box, shipped, "A")
-            b_ships = self._ship_in(dev, bh, s.a_box, shipped, "B")
-            if s.channel not in lead_in:
+            a_ships = self._ship_in(dev, ah, s.a_box, shipped, "A",
+                                    link_seen)
+            b_ships = self._ship_in(dev, bh, s.a_box, shipped, "B",
+                                    link_seen)
+            if flat not in lead_in:
                 i0, i1, c0, c1 = next(ew_tiles(s.rows, s.ks))
                 first = (i1 - i0) * (c1 - c0) * \
                     (int(a_ships) + int(b_ships))
-                lead_in[s.channel] = transfer_cycles(first * BYTES_PER_ELEM)
+                lead_in[flat] = transfer_cycles(first * BYTES_PER_ELEM)
             if execute:
                 n_before = len(dev.engine.instrs)
                 run = ew_on_engine_batched if mode == "batched" \
@@ -518,14 +728,16 @@ class PIMRuntime:
                     dev.charge_analytic(rep.cycles, rep.flops, rep.commands)
                     dev.events.append(
                         ("instr", InstrRecord(kind, i1 - i0, c1 - c0)))
-            if keep_output:
-                out_handle.mark_resident(s.channel, s.a_box)
-                out_handle.pending_d2h.append((s.channel, s.a_box))
+            # as in gemm: only actually-resident outputs defer their drain
+            if keep_output and out_handle.mark_resident(flat, s.a_box,
+                                                        pin=True):
+                out_handle.pending_d2h.append((flat, s.a_box))
             else:
                 dev.pim_to_host(s.rows * s.ks * BYTES_PER_ELEM)
 
         report = self._finish(f"ew-{kind}", (m, c), placement, before,
-                              lead_in)
+                              lead_in, link_before=link_before,
+                              devices=op_devs)
         if keep_output:
             return out_handle, report
         return (jnp.asarray(out) if execute else None), report
@@ -538,17 +750,19 @@ class PIMRuntime:
 
 def pim_gemm(a: jnp.ndarray, b: jnp.ndarray, channels: int = 1,
              placement: str = "row-striped", execute: bool = True,
-             engine: str = "batched"
+             engine: str = "batched", stacks: int = 1
              ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
-    """C = A @ B entirely in PIM mode on a fresh ``channels``-wide stack."""
-    return PIMRuntime(channels=channels, engine=engine).gemm(
+    """C = A @ B entirely in PIM mode on a fresh ``channels``-wide stack
+    (or ``stacks`` x ``channels`` cluster)."""
+    return PIMRuntime(channels=channels, engine=engine, stacks=stacks).gemm(
         a, b, placement=placement, execute=execute)
 
 
 def pim_gemv(a: jnp.ndarray, x: jnp.ndarray, channels: int = 1,
              placement: str = "row-striped", execute: bool = True,
-             engine: str = "batched"
+             engine: str = "batched", stacks: int = 1
              ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
-    """y = A @ x entirely in PIM mode on a fresh ``channels``-wide stack."""
-    return PIMRuntime(channels=channels, engine=engine).gemv(
+    """y = A @ x entirely in PIM mode on a fresh ``channels``-wide stack
+    (or ``stacks`` x ``channels`` cluster)."""
+    return PIMRuntime(channels=channels, engine=engine, stacks=stacks).gemv(
         a, x, placement=placement, execute=execute)

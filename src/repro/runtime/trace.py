@@ -27,6 +27,19 @@ JUMP and EXIT issue zero column commands (paper §2.3.3) and are not
 emitted; a trace's ``PIM`` line count therefore equals the engine ledger's
 ``commands`` — the round-trip property the tests pin.
 
+Multi-stack clusters add comment-shaped marker lines (external replay
+tools skip them; :func:`parse_trace` round-trips them):
+
+    # STACK <s>                   -- following channels belong to stack s
+    # HOSTLINK <kind> <bytes>     -- inter-stack bytes over the host link
+                                     (kind: xstack | drain)
+    # SPILL <channel> <bytes>     -- residency evicted under a capacity
+                                     bound (re-shipped on next use)
+
+A single-stack cluster emits none of these (no ``# STACK 0``), so its
+trace is byte-identical to a bare :class:`PIMStack`'s; ``# SPILL`` lines
+appear on bare stacks too when a capacity bound evicts.
+
 Traces are *expanded* (one line per command): dump small ops, not the
 benchmark sweep shapes.
 """
@@ -187,32 +200,59 @@ def _mem_lines(kind: str, channel: int, nbytes: int) -> List[str]:
     return out
 
 
-def emit_trace(stack: PIMStack) -> str:
-    """Serialize everything the stack's devices have executed so far."""
+def _emit_device(lines: List[str], dev) -> None:
+    """One device's event stream as trace lines."""
+    lines.append(f"# channel {dev.channel_id}")
+    for kind, payload in dev.events:
+        if kind in ("h2d", "d2h"):
+            lines.extend(_mem_lines(kind, dev.channel_id, payload))
+        elif kind == "reuse":
+            # resident operand consumed in place: no MEM transactions;
+            # comment-shaped so HBM-PIMulator replay skips it while our
+            # parser round-trips the avoided traffic
+            lines.append(f"# RESIDENT {dev.channel_id} {payload}")
+        elif kind == "spill":
+            # capacity eviction: no transactions now — the re-ship is a
+            # real MEM write when the evicted operand next misses
+            lines.append(f"# SPILL {dev.channel_id} {payload}")
+        elif kind == "instr":
+            # whole-shard spans (the fast paths' aggregated records)
+            # expand to the identical per-tile instruction sequence,
+            # so fast and reference traces are byte-for-byte equal
+            recs = payload.records() if isinstance(payload, ShardSpan) \
+                else (payload,)
+            for rec in recs:
+                if rec.kind == "mac":
+                    _expand_mac(lines, rec)
+                else:
+                    _expand_ew(lines, rec)
+        else:
+            raise ValueError(kind)
+
+
+def emit_trace(stack) -> str:
+    """Serialize everything the stack's devices have executed so far.
+
+    Accepts a :class:`PIMStack` or a :class:`~repro.runtime.cluster.
+    PIMCluster`.  Multi-stack clusters group channels under ``# STACK s``
+    markers and prepend the host-link ledger as ``# HOSTLINK`` lines; a
+    single-stack cluster emits neither, staying byte-identical to a bare
+    stack.
+    """
     lines = [HEADER]
-    for dev in stack:
-        lines.append(f"# channel {dev.channel_id}")
-        for kind, payload in dev.events:
-            if kind in ("h2d", "d2h"):
-                lines.extend(_mem_lines(kind, dev.channel_id, payload))
-            elif kind == "reuse":
-                # resident operand consumed in place: no MEM transactions;
-                # comment-shaped so HBM-PIMulator replay skips it while our
-                # parser round-trips the avoided traffic
-                lines.append(f"# RESIDENT {dev.channel_id} {payload}")
-            elif kind == "instr":
-                # whole-shard spans (the fast paths' aggregated records)
-                # expand to the identical per-tile instruction sequence,
-                # so fast and reference traces are byte-for-byte equal
-                recs = payload.records() if isinstance(payload, ShardSpan) \
-                    else (payload,)
-                for rec in recs:
-                    if rec.kind == "mac":
-                        _expand_mac(lines, rec)
-                    else:
-                        _expand_ew(lines, rec)
-            else:
-                raise ValueError(kind)
+    stacks = getattr(stack, "stacks", None)
+    if stacks is None:                               # bare PIMStack
+        for dev in stack:
+            _emit_device(lines, dev)
+        return "\n".join(lines) + "\n"
+    multi = len(stacks) > 1
+    for kind, nbytes in stack.link.events:
+        lines.append(f"# HOSTLINK {kind} {nbytes}")
+    for sid, stk in enumerate(stacks):
+        if multi:
+            lines.append(f"# STACK {sid}")
+        for dev in stk:
+            _emit_device(lines, dev)
     return "\n".join(lines) + "\n"
 
 
@@ -248,24 +288,49 @@ class TraceStats:
         default_factory=collections.Counter)       # per channel
     resident_bytes: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)       # per channel
+    spill_bytes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per channel
+    # -- cluster dimension: on single-stack traces the per-stack counters
+    # accumulate under stack 0 (no # STACK markers exist to switch on) —
+    # use ``stacks_seen`` (empty unless markers appeared) to distinguish
+    # cluster traces, never truthiness of the counters ------------------
+    stacks_seen: List[int] = dataclasses.field(default_factory=list)
+    pim_per_stack: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    mem_writes_per_stack: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    mem_reads_per_stack: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)
+    host_link_bytes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per kind (xstack|drain)
+    host_link_events: int = 0
 
     @property
     def channels(self):
         return sorted(set(self.pim_per_channel)
                       | set(self.mem_writes) | set(self.mem_reads))
 
+    @property
+    def total_host_link_bytes(self) -> int:
+        return sum(self.host_link_bytes.values())
+
 
 _CHANNEL_RE = re.compile(r"^# channel (\d+)$")
 _RESIDENT_RE = re.compile(r"^# RESIDENT (\d+) (\d+)$")
+_STACK_RE = re.compile(r"^# STACK (\d+)$")
+_HOSTLINK_RE = re.compile(r"^# HOSTLINK (xstack|drain) (\d+)$")
+_SPILL_RE = re.compile(r"^# SPILL (\d+) (\d+)$")
 _MEM_RE = re.compile(r"^([RW]) MEM (\d+) (\d+) (\d+)$")
 _PIM_RE = re.compile(r"^PIM ([A-Z]+)((?: [A-Z]+,\d+)*)$")
 _CFR_RE = re.compile(r'^W CFR "(\d+)" ([A-Z]+)$')
 
 
 def parse_trace(text: str) -> TraceStats:
-    """Parse an emitted trace back into per-channel command counts."""
+    """Parse an emitted trace back into per-channel (and, for cluster
+    traces, per-stack / host-link) command counts."""
     stats = TraceStats()
     channel = 0
+    stack = 0
     for lineno, line in enumerate(text.splitlines(), 1):
         line = line.rstrip()
         if not line:
@@ -273,6 +338,20 @@ def parse_trace(text: str) -> TraceStats:
         mm = _CHANNEL_RE.match(line)
         if mm:
             channel = int(mm.group(1))
+            continue
+        mm = _STACK_RE.match(line)
+        if mm:
+            stack = int(mm.group(1))
+            stats.stacks_seen.append(stack)
+            continue
+        mm = _HOSTLINK_RE.match(line)
+        if mm:
+            stats.host_link_events += 1
+            stats.host_link_bytes[mm.group(1)] += int(mm.group(2))
+            continue
+        mm = _SPILL_RE.match(line)
+        if mm:
+            stats.spill_bytes[int(mm.group(1))] += int(mm.group(2))
             continue
         mm = _RESIDENT_RE.match(line)
         if mm:
@@ -290,14 +369,19 @@ def parse_trace(text: str) -> TraceStats:
             continue
         mm = _MEM_RE.match(line)
         if mm:
-            tgt = stats.mem_writes if mm.group(1) == "W" else stats.mem_reads
-            tgt[int(mm.group(2))] += 1
+            if mm.group(1) == "W":
+                stats.mem_writes[int(mm.group(2))] += 1
+                stats.mem_writes_per_stack[stack] += 1
+            else:
+                stats.mem_reads[int(mm.group(2))] += 1
+                stats.mem_reads_per_stack[stack] += 1
             continue
         mm = _PIM_RE.match(line)
         if mm:
             stats.pim_commands += 1
             stats.opcodes[mm.group(1)] += 1
             stats.pim_per_channel[channel] += 1
+            stats.pim_per_stack[stack] += 1
             continue
         raise ValueError(f"unparseable trace line {lineno}: {line!r}")
     return stats

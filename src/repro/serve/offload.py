@@ -45,6 +45,7 @@ from repro.configs.base import ArchConfig
 from repro.core.isa import PIM_FREQ_HZ
 from repro.launch import hw
 from repro.runtime import BYTES_PER_ELEM, DeviceTensor, PIMRuntime
+from repro.sharding.rules import ame_pim_stack_map
 
 F16 = np.float16
 
@@ -180,9 +181,21 @@ class DecodeOffload:
     (:meth:`_xla_reference`); the lm_head output is the step's logits and
     its deviation is tracked separately (``logits_max_err``).  Small
     configs only (:data:`NUMERIC_MAX_WEIGHT_BYTES`).
+
+    ``stacks > 1`` runs the sidecar on a multi-stack
+    :class:`~repro.runtime.cluster.PIMCluster`: every weight instance is
+    homed on its *layer's* stack per the ``ame_pim`` layers map
+    (:func:`~repro.sharding.rules.ame_pim_stack_map` — contiguous layer
+    blocks, one layer's attention/MLP/experts/router together, lm_head
+    with the last layer), weights are placed on their home stack only, and
+    every step's matmuls run stack-restricted — so per-stack capacity,
+    upload distribution, and the host-link ledger all scale past one
+    stack while numerics and per-op ledgers stay those of a
+    ``channels``-wide decomposition.
     """
 
     def __init__(self, cfg: ArchConfig, *, channels: int = 16,
+                 stacks: int = 1,
                  placement: str = "balanced", numeric: bool = False,
                  seed: int = 0, atol: float = NUMERIC_ATOL,
                  engine: str = "batched"):
@@ -190,7 +203,9 @@ class DecodeOffload:
         self.placement = placement
         self.numeric = numeric
         self.atol = atol
-        self.rt = PIMRuntime(channels=channels, engine=engine)
+        self.stacks = stacks
+        self.rt = PIMRuntime(channels=channels, stacks=stacks,
+                             engine=engine)
         self.matmuls = decode_matmuls(cfg)
         if numeric and self.weight_bytes > NUMERIC_MAX_WEIGHT_BYTES:
             raise ValueError(
@@ -198,23 +213,59 @@ class DecodeOffload:
                 f"{self.weight_bytes} bytes exceeds the small-config cap "
                 f"{NUMERIC_MAX_WEIGHT_BYTES} — use a cfg.reduced()")
         rng = np.random.default_rng(seed)
-        self.weights: List[Tuple[DecodeMatmul, List[DeviceTensor]]] = []
+        # (matmul, [(home stack or None, handle), ...]) — every instance
+        # homed on its *layer's* stack (ame_pim layers map), so one
+        # layer's attention, MLP/expert, and router weights share a stack
+        # and the hidden-state hand-off between them never crosses it
+        layer_stacks = ame_pim_stack_map(cfg, stacks)["layers"] \
+            if stacks > 1 else None
+        self.weights: List[Tuple[DecodeMatmul,
+                                 List[Tuple[Optional[int],
+                                            DeviceTensor]]]] = []
         for m in self.matmuls:
+            homes = [layer_stacks[ell] for ell in self._family_layers(m)] \
+                if stacks > 1 else [None] * m.count
             handles = []
-            for _ in range(m.count):
+            for home in homes:
                 if numeric:
                     w = (rng.standard_normal((m.out_dim, m.in_dim))
                          * 0.05).astype(F16)
-                    handles.append(self.rt.place(w, placement=placement))
+                    handles.append((home, self.rt.place(
+                        w, placement=placement, stack=home)))
                 else:
-                    handles.append(self.rt.place((m.out_dim, m.in_dim),
-                                                 placement=placement))
+                    handles.append((home, self.rt.place(
+                        (m.out_dim, m.in_dim), placement=placement,
+                        stack=home)))
             self.weights.append((m, handles))
         self.upload_bytes = sum(d.xfer.h2d_bytes for d in self.rt.stack)
+        self.upload_bytes_per_stack: Optional[List[int]] = None
+        if stacks > 1:
+            self.upload_bytes_per_stack = [
+                sum(d.xfer.h2d_bytes for d in stk)
+                for stk in self.rt.stack.stacks]
         self.steps: List[StepRecord] = []
         self.last_logits: Optional[np.ndarray] = None     # numeric mode
         self._rng = rng
         self._act_cache: Dict[Tuple[int, int], np.ndarray] = {}
+
+    def _family_layers(self, m: DecodeMatmul) -> List[int]:
+        """Decoder-layer index of each instance of one matmul family —
+        the key the ame_pim layers map is consulted with, so instance
+        counts that collapse layer x expert still land each weight on
+        its layer's home stack.  lm_head follows the last layer (that is
+        where its input activation lives)."""
+        cfg = self.cfg
+        if m.name == "lm_head":
+            return [cfg.n_layers - 1]
+        if m.name.startswith("moe."):
+            fd = cfg.moe.first_dense_layers
+            if m.name == "moe.router":
+                return [fd + i for i in range(m.count)]
+            active = cfg.moe.top_k + cfg.moe.n_shared
+            return [fd + i // active for i in range(m.count)]
+        # attn.* spans all layers; mlp.* spans all dense layers (= the
+        # leading first_dense_layers block under MoE) — both from 0
+        return list(range(m.count))
 
     @property
     def weight_bytes(self) -> int:
@@ -261,9 +312,9 @@ class DecodeOffload:
             self._act_cache.clear()     # fresh activations each step
         for m, handles in self.weights:
             x = self._activation(m.in_dim, batch)
-            for h in handles:
+            for home, h in handles:
                 y, rep = self.rt.gemm(h, x, placement=self.placement,
-                                      execute=self.numeric)
+                                      execute=self.numeric, stack=home)
                 pim_cycles += rep.makespan_cycles    # ops serialize per step
                 flops += rep.total_flops
                 if self.numeric:
@@ -314,7 +365,15 @@ class DecodeOffload:
         steady = [s for s in self.steps if s.batch == peak][-1]
         return {
             "arch": self.cfg.name,
-            "channels": len(self.rt.stack),
+            # the per-op decomposition width (channels per stack) — every
+            # op is stack-restricted, so this, not stacks*channels, is
+            # the width the per-channel ledgers reflect
+            "channels": (len(self.rt.stack) if self.stacks == 1
+                         else self.rt.stack.channels_per_stack),
+            "stacks": self.stacks,
+            "upload_bytes_per_stack": self.upload_bytes_per_stack,
+            "host_link_bytes": (self.rt.stack.link.bytes
+                                if self.stacks > 1 else 0),
             "placement": self.placement,
             "matmuls_per_step": sum(m.count for m in self.matmuls),
             "weight_bytes": self.weight_bytes,

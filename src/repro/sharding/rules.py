@@ -1,12 +1,20 @@
 """PartitionSpec rules: parameter/optimizer/batch/cache shardings per arch.
 
-The two tensor-parallel dataflows (DESIGN.md §3):
+The tensor-parallel dataflows (DESIGN.md §3):
 
 * ``allreduce`` (Megatron): up-projections column-sharded on 'model',
   down-projections row-sharded => partial sums all-reduced.
 * ``allgather`` (the paper's reduction-free outer-product dataflow): every
   weight sharded on its *output* dim; inputs are all-gathered just-in-time
   and partial sums never cross the 'model' axis.
+* ``ame_pim`` — the device-runtime flavor: mesh-level specs are the
+  ``allgather`` output-dim sharding (the PIM dataflow is reduction-free
+  and output-stationary, so partial sums never cross 'model' there
+  either), plus a *stack* assignment for the PIM cluster: model-parallel
+  layouts map layers (and experts) onto :class:`~repro.runtime.cluster.
+  PIMCluster` stacks as contiguous blocks — :func:`ame_pim_layer_stacks`
+  / :func:`ame_pim_stack_map`, consumed by ``repro.serve.offload.
+  DecodeOffload(stacks=...)``.
 
 FSDP ('data'-axis parameter + optimizer-state sharding) stacks on top for
 the large archs (policy.fsdp).
@@ -14,12 +22,12 @@ the large archs (policy.fsdp).
 from __future__ import annotations
 
 import math
-from typing import Any, Dict, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.configs.base import ArchConfig
+from repro.configs.base import ArchConfig, OUTPUT_SHARDED_TP_MODES
 
 
 def _axis_size(mesh: Mesh, axis) -> int:
@@ -49,7 +57,7 @@ def _path_str(path) -> str:
 def _base_rule(pstr: str, cfg: ArchConfig) -> Tuple:
     """Logical spec for the *unstacked* parameter (innermost dims)."""
     fsdp = "data" if cfg.policy.fsdp else None
-    ag = cfg.policy.tp_mode == "allgather"
+    ag = cfg.policy.tp_mode in OUTPUT_SHARDED_TP_MODES
     ep = cfg.moe is not None and cfg.moe.sharding == "ep"
 
     if "embed/table" in pstr:
@@ -175,3 +183,44 @@ def cache_pspecs(cfg: ArchConfig, cache_shapes, mesh: Mesh):
 def to_named(tree, mesh: Mesh):
     return jax.tree.map(lambda s: NamedSharding(mesh, s), tree,
                         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# ame_pim: mapping model-parallel layouts onto PIM cluster stacks
+# ---------------------------------------------------------------------------
+
+
+def ame_pim_layer_stacks(n: int, stacks: int) -> List[int]:
+    """Stack id for each of ``n`` layers (or experts): contiguous
+    near-equal blocks, earlier stacks taking the remainder.
+
+    Contiguity is deliberate — adjacent decode layers hand their hidden
+    state to each other, so keeping neighbors on one stack minimizes the
+    host-link crossings the cluster ledger charges; near-equal blocks
+    keep per-stack weight capacity balanced.
+    """
+    if stacks < 1:
+        raise ValueError(f"need at least one stack, got {stacks}")
+    if n <= 0:
+        return []
+    q, r = divmod(n, stacks)
+    out: List[int] = []
+    for s in range(stacks):
+        out.extend([s] * (q + (1 if s < r else 0)))
+    return out
+
+
+def ame_pim_stack_map(cfg: ArchConfig, stacks: int) -> Dict[str, List[int]]:
+    """The ``ame_pim`` layout of one arch on a ``stacks``-stack cluster.
+
+    ``layers`` maps each decoder layer to its home stack (contiguous
+    blocks) — what ``DecodeOffload(stacks=N)`` consumes, every weight
+    instance homed with its layer.  ``experts`` (MoE only) maps the
+    *full* expert bank round-robin over stacks for mesh-level placement,
+    where capacity (all experts resident), not per-step routing, is
+    what's being spread.
+    """
+    out = {"layers": ame_pim_layer_stacks(cfg.n_layers, stacks)}
+    if cfg.moe is not None:
+        out["experts"] = [e % stacks for e in range(cfg.moe.num_experts)]
+    return out

@@ -1,0 +1,495 @@
+"""Multi-stack cluster tests: single-stack clusters are bit-identical
+(ledgers + traces) to bare stacks, fixed-total-channel reshapes keep
+makespan parity with host-link bytes only where shards cross stacks,
+cross-stack K-split drains charge the link, ``# STACK`` / ``# HOSTLINK``
+/ ``# SPILL`` markers round-trip through the trace, residency capacity
+bounds evict LRU-first as spill, the synchronous-DMA transfer mode, the
+``place`` input validation, the ``ame_pim`` sharding rules, and the
+multi-stack decode offload."""
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.runtime import (
+    HOST_LINK_BYTES_PER_CYCLE,
+    PIMCluster,
+    PIMRuntime,
+    PIMStack,
+    PLACEMENTS,
+    cluster_shards,
+    host_link_cycles,
+    pim_gemm,
+    placement_shards,
+)
+from repro.runtime.trace import emit_trace, parse_trace
+from repro.serve.offload import DecodeOffload
+from repro.sharding.rules import ame_pim_layer_stacks, ame_pim_stack_map
+
+RNG = np.random.default_rng(7)
+
+
+def rand(*shape, scale=0.15):
+    return (RNG.standard_normal(shape) * scale).astype(np.float16)
+
+
+# ---------------------------------------------------------------------------
+# single-stack cluster == bare stack, bit for bit
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("placement", sorted(PLACEMENTS))
+def test_single_stack_cluster_identical_to_bare_stack(placement):
+    a, b = rand(256, 512), rand(512, 96)
+    bare = PIMRuntime(channels=4)
+    clus = PIMRuntime(stack=PIMCluster(1, 4))
+    y_b, rep_b = bare.gemm(a, b, placement=placement)
+    y_c, rep_c = clus.gemm(a, b, placement=placement)
+    assert np.array_equal(np.asarray(y_b), np.asarray(y_c))
+    assert rep_b == rep_c                     # ==-equal ledgers
+    assert rep_c.host_link_bytes == 0 and rep_c.stacks == 1
+    assert emit_trace(bare.stack) == emit_trace(clus.stack)   # byte-equal
+
+
+def test_single_stack_cluster_identical_for_elementwise_and_residency():
+    a, b = rand(256, 256), rand(256, 256)
+    bare, clus = PIMRuntime(channels=4), PIMRuntime(stack=PIMCluster(1, 4))
+    for rt in (bare, clus):
+        w = rt.place(a, placement="balanced", other_dim=256)
+        rt.elementwise("mul", a, b, placement="row-striped")
+        rt.gemm(w, b, placement="balanced")
+    assert emit_trace(bare.stack) == emit_trace(clus.stack)
+
+
+def test_runtime_stacks_1_is_bare_stack():
+    rt = PIMRuntime(channels=4, stacks=1)
+    assert isinstance(rt.stack, PIMStack)
+    assert rt.n_stacks == 1
+
+
+# ---------------------------------------------------------------------------
+# stack-axis placement: flat geometry preserved at fixed total channels
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("placement", sorted(PLACEMENTS))
+@pytest.mark.parametrize("stacks,cps", [(2, 8), (4, 4)])
+def test_cluster_shards_preserve_flat_geometry(placement, stacks, cps):
+    flat = placement_shards(placement, 512, 1024, 64, stacks * cps)
+    clus = cluster_shards(placement, 512, 1024, 64, stacks, cps)
+    assert len(flat) == len(clus)
+    for f, c in zip(flat, clus):
+        assert c.stack == f.channel // cps
+        assert c.channel == f.channel % cps
+        assert (c.m0, c.m1, c.k0, c.k1, c.n0, c.n1) == \
+            (f.m0, f.m1, f.k0, f.k1, f.n0, f.n1)
+
+
+@pytest.mark.parametrize("placement", sorted(PLACEMENTS))
+def test_fixed_total_channels_makespan_parity(placement):
+    a, b = rand(512, 768), rand(768, 128)
+    y_f, rep_f = pim_gemm(a, b, channels=16, placement=placement)
+    y_c, rep_c = pim_gemm(a, b, channels=4, placement=placement, stacks=4)
+    assert np.array_equal(np.asarray(y_f), np.asarray(y_c))
+    assert rep_c.makespan_cycles == rep_f.makespan_cycles
+    # per-channel ledgers identical under the flat view
+    for cf, cc in zip(rep_f.per_channel, rep_c.per_channel):
+        assert (cf.compute_cycles, cf.flops, cf.commands, cf.h2d_bytes,
+                cf.d2h_bytes) == (cc.compute_cycles, cc.flops, cc.commands,
+                                  cc.h2d_bytes, cc.d2h_bytes)
+
+
+def test_host_link_bytes_only_where_shards_cross_stacks():
+    a, b = rand(2048, 512), rand(512, 128)    # 16 row blocks: all 16 busy
+    # row-striped: every channel gets full B -> B crosses all 4 stacks;
+    # per-channel A rows never repeat -> only B charges the link
+    _, rep = pim_gemm(a, b, channels=4, placement="row-striped", stacks=4)
+    b_bytes = b.size * 2
+    assert rep.host_link_bytes == 3 * b_bytes
+    assert rep.host_link_cycles == 3 * host_link_cycles(b_bytes)
+    # one stack of the same cluster shape: nothing crosses
+    rt = PIMRuntime(channels=4, stacks=4)
+    _, rep1 = rt.gemm(a, b, placement="row-striped", stack=2)
+    assert rep1.host_link_bytes == 0
+    # restricted ops report only the participating stack's channels
+    assert rep1.channels == 4 and len(rep1.per_channel) == 4
+    assert all(c.stack == 2 for c in rep1.per_channel)
+    assert any(c.busy_cycles > 0 for c in rep1.per_channel)
+
+
+def test_place_charges_link_for_cross_stack_replication():
+    # 2d-block role=B: column slabs replicate across the 2 row groups,
+    # which straddle the 2 stacks -> one extra copy of B crosses the link
+    b = np.zeros((512, 96), np.float16)
+    rt = PIMRuntime(channels=4, stacks=2)
+    rt.place(b, placement="2d-block", role="B", other_dim=256)
+    assert rt.stack.link.bytes == b.size * 2
+    # pinned to one stack: no crossing
+    rt2 = PIMRuntime(channels=4, stacks=2)
+    rt2.place(b, placement="2d-block", role="B", other_dim=256, stack=1)
+    assert rt2.stack.link.bytes == 0
+    assert all(d.xfer.h2d_bytes == 0 for d in rt2.stack.stacks[0])
+
+
+def test_cross_stack_ksplit_drains_charge_link():
+    # balanced on a 1-row-block GEMV splits K across all channels: the
+    # partial drains of the single reduction group span every stack, so
+    # all partials beyond the home stack's cross the link
+    a, x = rand(128, 4096), rand(4096)
+    rt = PIMRuntime(channels=2, stacks=2)
+    _, rep = rt.gemv(a, x, placement="balanced")
+    partial_bytes = 128 * 1 * 2          # one partial column per shard
+    expected = partial_bytes * 2         # the two stack-1 partials
+    drain = sum(n for k, n in rt.stack.link.events if k == "drain")
+    assert drain == expected
+    assert rep.host_link_bytes >= expected
+    # single stack, same shape: no link at all
+    rt1 = PIMRuntime(channels=4)
+    rt1.gemv(a, x, placement="balanced")
+    assert not hasattr(rt1.stack, "link")
+
+
+def test_cluster_makespan_folds_link_in():
+    a, b = rand(512, 512), rand(512, 64)      # 4 blocks: both stacks busy
+    _, rep = pim_gemm(a, b, channels=2, placement="row-striped", stacks=2)
+    assert rep.host_link_bytes > 0
+    assert rep.cluster_makespan_cycles == max(rep.makespan_cycles,
+                                              rep.host_link_cycles)
+
+
+def test_stack_restricted_op_requires_cluster():
+    rt = PIMRuntime(channels=4)
+    with pytest.raises(ValueError, match="stack="):
+        rt.gemm(rand(128, 128), rand(128, 128), stack=0)
+    rtc = PIMRuntime(channels=2, stacks=2)
+    with pytest.raises(ValueError, match="out of range"):
+        rtc.gemm(rand(128, 128), rand(128, 128), stack=5)
+
+
+def test_analytic_and_numeric_cluster_ledgers_identical():
+    a, b = rand(256, 512), rand(512, 96)
+    for placement in sorted(PLACEMENTS):
+        rx = PIMRuntime(channels=4, stacks=2)
+        ra = PIMRuntime(channels=4, stacks=2)
+        _, rep_x = rx.gemm(a, b, placement=placement)
+        _, rep_a = ra.gemm(a, b, placement=placement, execute=False)
+        for cx, ca in zip(rep_x.per_channel, rep_a.per_channel):
+            assert (cx.compute_cycles, cx.flops, cx.commands) \
+                == (ca.compute_cycles, ca.flops, ca.commands)
+        assert rep_x.host_link_bytes == rep_a.host_link_bytes
+
+
+# ---------------------------------------------------------------------------
+# trace markers round-trip
+# ---------------------------------------------------------------------------
+
+
+def test_stack_markers_roundtrip_through_trace():
+    rt = PIMRuntime(channels=2, stacks=2)
+    a, b = rand(512, 256), rand(256, 32)      # 4 blocks: both stacks busy
+    _, rep = rt.gemm(a, b, placement="row-striped")
+    text = emit_trace(rt.stack)
+    stats = parse_trace(text)
+    assert stats.stacks_seen == [0, 1]
+    # per-stack PIM command counts match the device ledgers
+    for sid, stk in enumerate(rt.stack.stacks):
+        assert stats.pim_per_stack[sid] == \
+            sum(d.compute_commands for d in stk)
+        assert stats.mem_writes_per_stack[sid] == \
+            sum(d.xfer.h2d_cycles for d in stk)
+    # host-link marker bytes equal the ledger
+    assert stats.total_host_link_bytes == rt.stack.link.bytes > 0
+    assert stats.host_link_events == len(rt.stack.link.events)
+
+
+def test_single_stack_trace_has_no_stack_markers():
+    rt = PIMRuntime(stack=PIMCluster(1, 2))
+    rt.gemm(rand(128, 128), rand(128, 32))
+    text = emit_trace(rt.stack)
+    assert "# STACK" not in text and "# HOSTLINK" not in text
+    stats = parse_trace(text)
+    assert stats.stacks_seen == [] and stats.host_link_events == 0
+
+
+def test_spill_markers_roundtrip_through_trace():
+    cap = 128 * 256 * 2                       # one 128-row box of 256 cols
+    rt = PIMRuntime(channels=2, capacity_bytes=cap)
+    w1 = rt.place(rand(256, 256), placement="balanced")
+    rt.place(rand(256, 256), placement="balanced")    # evicts w1
+    stats = parse_trace(emit_trace(rt.stack))
+    assert sum(stats.spill_bytes.values()) == \
+        sum(d.spill_bytes for d in rt.stack) == 2 * cap
+
+
+# ---------------------------------------------------------------------------
+# residency capacity guard (LRU spill)
+# ---------------------------------------------------------------------------
+
+
+def test_capacity_unbounded_by_default():
+    rt = PIMRuntime(channels=2)
+    w = rt.place(rand(512, 256), placement="balanced")
+    assert all(d.capacity_bytes is None for d in rt.stack)
+    _, rep = rt.gemv(w, rand(256), placement="balanced")
+    assert rep.total_spill_bytes == 0
+    assert rep.total_reuse_bytes == w.shape[0] * w.shape[1] * 2
+
+
+def test_capacity_evicts_lru_and_recharges_as_reship():
+    a1, a2, x = rand(256, 256), rand(256, 256), rand(256)
+    box = 128 * 256 * 2
+    rt = PIMRuntime(channels=2, capacity_bytes=box)
+    w1 = rt.place(a1, placement="balanced")
+    w2 = rt.place(a2, placement="balanced")   # evicts w1 per channel
+    assert sum(d.spill_bytes for d in rt.stack) == 2 * box
+    # w2 is the resident one: zero weight h2d
+    y2, rep2 = rt.gemv(w2, x, placement="balanced")
+    assert rep2.total_reuse_bytes == 2 * box
+    # w1 was spilled: full re-ship (which evicts w2 again), numerics exact
+    y1, rep1 = rt.gemv(w1, x, placement="balanced")
+    assert rep1.total_reuse_bytes == 0
+    assert rep1.total_h2d_bytes >= 2 * box
+    y_ref, _ = PIMRuntime(channels=2).gemv(a1, x, placement="balanced")
+    assert np.array_equal(np.asarray(y1), np.asarray(y_ref))
+
+
+def test_capacity_touch_order_is_lru_not_fifo():
+    box = 128 * 128 * 2
+    dev_rt = PIMRuntime(channels=1, capacity_bytes=2 * box)
+    w1 = dev_rt.place(rand(128, 128), placement="row-striped", other_dim=128)
+    w2 = dev_rt.place(rand(128, 128), placement="row-striped", other_dim=128)
+    # touch w1 so w2 becomes the LRU victim
+    dev_rt.gemm(w1, rand(128, 128), placement="row-striped")
+    w3 = dev_rt.place(rand(128, 128), placement="row-striped", other_dim=128)
+    dev = dev_rt.stack[0]
+    assert dev.resident_bytes_of(w1.uid) == box      # survived
+    assert dev.resident_bytes_of(w2.uid) == 0        # evicted
+    assert dev.resident_bytes_of(w3.uid) == box
+
+
+def test_keep_output_drains_immediately_when_capacity_refuses():
+    a, b = rand(128, 128), rand(128, 128)
+    # capacity too small for the 128x128 output box: keep_output cannot
+    # actually keep it, so the drain is charged now, not deferred
+    rt = PIMRuntime(channels=1, capacity_bytes=1024)
+    h, rep = rt.gemm(a, b, placement="row-striped", keep_output=True)
+    out_bytes = 128 * 128 * 2
+    assert rep.total_d2h_bytes == out_bytes         # drained at op time
+    assert h.pending_d2h == []                      # nothing deferred
+    d2h_before = sum(d.xfer.d2h_bytes for d in rt.stack)
+    out = h.to_host()                               # no second drain
+    assert sum(d.xfer.d2h_bytes for d in rt.stack) == d2h_before
+    y_ref, _ = PIMRuntime(channels=1).gemm(a, b, placement="row-striped")
+    assert np.array_equal(np.asarray(out), np.asarray(y_ref))
+    # unbounded: the drain is deferred as before
+    rt2 = PIMRuntime(channels=1)
+    h2, rep2 = rt2.gemm(a, b, placement="row-striped", keep_output=True)
+    assert rep2.total_d2h_bytes == 0 and len(h2.pending_d2h) == 1
+
+
+def test_kept_output_is_pinned_until_drained():
+    a, b = rand(128, 128), rand(128, 128)
+    out_bytes = 128 * 128 * 2
+    # capacity holds exactly one box: the kept output occupies it
+    rt = PIMRuntime(channels=1, capacity_bytes=out_bytes)
+    # operand residency won't stick (A evicted to fit the output or
+    # refused outright) but the undrained output must never be spilled
+    h, rep = rt.gemm(a, b, placement="row-striped", keep_output=True)
+    assert rep.total_d2h_bytes == 0 and len(h.pending_d2h) == 1
+    w = rt.place(rand(128, 128), placement="row-striped", other_dim=128)
+    dev = rt.stack[0]
+    assert dev.resident_bytes_of(h.uid) == out_bytes   # survived (pinned)
+    assert dev.resident_bytes_of(w.uid) == 0           # refused, streamed
+    out = h.to_host()                                  # drain + unpin
+    assert dev.xfer.d2h_bytes == out_bytes
+    y_ref, _ = PIMRuntime(channels=1).gemm(a, b, placement="row-striped")
+    assert np.array_equal(np.asarray(out), np.asarray(y_ref))
+    # drained output is evictable again: the next place can claim the slot
+    w2 = rt.place(rand(128, 128), placement="row-striped", other_dim=128)
+    assert dev.resident_bytes_of(w2.uid) == out_bytes
+    assert dev.resident_bytes_of(h.uid) == 0
+
+
+def test_doomed_insert_spills_nothing():
+    # capacity 3 boxes: a pinned 2-box output + a 1-box tensor; a 2-box
+    # insert cannot fit even after evicting w1, so it must be refused
+    # up-front without costing w1 its residency
+    box = 128 * 128 * 2
+    rt = PIMRuntime(channels=1, capacity_bytes=3 * box)
+    h, _ = rt.gemm(rand(256, 128), rand(128, 128),
+                   placement="row-striped", keep_output=True)   # pinned
+    w1 = rt.place(rand(128, 128), placement="row-striped", other_dim=128)
+    dev = rt.stack[0]
+    w2 = rt.place(rand(256, 128), placement="row-striped", other_dim=128)
+    assert dev.resident_bytes_of(w2.uid) == 0      # refused (2-box block)
+    assert dev.resident_bytes_of(w1.uid) == box    # untouched
+    assert dev.spill_bytes == 0                    # nothing spilled
+
+
+def test_oversized_box_streams_without_residency():
+    rt = PIMRuntime(channels=1, capacity_bytes=1024)
+    w = rt.place(rand(128, 128), placement="row-striped", other_dim=128)
+    assert rt.stack.resident_bytes == 0
+    # charged as plain h2d both times, no spill events
+    _, rep = rt.gemm(w, rand(128, 128), placement="row-striped")
+    assert rep.total_reuse_bytes == 0 and rep.total_spill_bytes == 0
+    assert rep.total_h2d_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# synchronous-DMA (non-overlapped) transfer mode
+# ---------------------------------------------------------------------------
+
+
+def test_sync_dma_mode_is_strict_sequence():
+    a, b = rand(512, 2048), rand(2048, 128)
+    _, rep_o = PIMRuntime(channels=4).gemm(a, b, placement="row-striped")
+    _, rep_s = PIMRuntime(channels=4, overlap=False).gemm(
+        a, b, placement="row-striped")
+    for co, cs in zip(rep_o.per_channel, rep_s.per_channel):
+        # identical ledgers, only the busy model differs
+        assert (co.h2d_cycles, co.compute_cycles, co.d2h_cycles) \
+            == (cs.h2d_cycles, cs.compute_cycles, cs.d2h_cycles)
+        assert cs.busy_cycles == \
+            cs.h2d_cycles + cs.compute_cycles + cs.d2h_cycles
+        assert cs.busy_cycles >= co.busy_cycles
+    assert rep_s.makespan_cycles >= rep_o.makespan_cycles
+
+
+def test_sync_dma_strictly_slower_when_transfers_overlap_compute():
+    # multi-tile shard: overlap hides everything but the first tile pair
+    a, b = rand(1024, 4096), rand(4096, 256)
+    _, rep_o = PIMRuntime(channels=2).gemm(a, b, execute=False)
+    _, rep_s = PIMRuntime(channels=2, overlap=False).gemm(
+        a, b, execute=False)
+    assert rep_s.makespan_cycles > rep_o.makespan_cycles
+
+
+# ---------------------------------------------------------------------------
+# place() input validation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("bad", [
+    np.zeros(16, np.float16),                  # 1D
+    np.zeros((2, 3, 4), np.float16),           # 3D
+    (16,),                                     # 1-tuple shape
+    (2, 3, 4),                                 # 3-tuple shape
+])
+def test_place_rejects_non_2d_with_clear_error(bad):
+    rt = PIMRuntime(channels=2)
+    with pytest.raises(ValueError, match="2D"):
+        rt.place(bad)
+
+
+def test_place_scalar_rejected():
+    with pytest.raises(ValueError, match="2D"):
+        PIMRuntime(channels=1).place(np.float16(3.0))
+
+
+# ---------------------------------------------------------------------------
+# ame_pim sharding rules
+# ---------------------------------------------------------------------------
+
+
+def test_ame_pim_layer_stacks_contiguous_balanced():
+    assert ame_pim_layer_stacks(8, 4) == [0, 0, 1, 1, 2, 2, 3, 3]
+    assert ame_pim_layer_stacks(5, 2) == [0, 0, 0, 1, 1]
+    assert ame_pim_layer_stacks(2, 4) == [0, 1]
+    assert ame_pim_layer_stacks(6, 1) == [0] * 6
+    assert ame_pim_layer_stacks(0, 4) == []
+    with pytest.raises(ValueError):
+        ame_pim_layer_stacks(4, 0)
+
+
+def test_ame_pim_layer_stacks_properties():
+    for n in (1, 7, 16, 61):
+        for stacks in (1, 2, 4, 8):
+            m = ame_pim_layer_stacks(n, stacks)
+            assert len(m) == n
+            assert m == sorted(m)                       # contiguous blocks
+            sizes = [m.count(s) for s in range(stacks)]
+            if n >= stacks:
+                assert min(sizes) >= 1                  # every stack used
+                assert max(sizes) - min(sizes) <= 1     # near-equal
+            else:
+                assert sizes[:n] == [1] * n and sum(sizes) == n
+
+
+def test_ame_pim_stack_map_covers_layers_and_experts():
+    cfg = get("mixtral-8x22b")
+    sm = ame_pim_stack_map(cfg, 4)
+    assert len(sm["layers"]) == cfg.n_layers
+    assert set(sm["experts"]) == set(range(4))
+    dense = get("qwen3-1.7b")
+    assert "experts" not in ame_pim_stack_map(dense, 2)
+
+
+def test_ame_pim_tp_mode_shares_allgather_specs():
+    from repro.sharding.rules import _base_rule
+
+    ag = get("qwen3-1.7b").with_policy(tp_mode="allgather")
+    pim = get("qwen3-1.7b").with_policy(tp_mode="ame_pim")
+    for pstr in ("layers/attn/wo/w", "layers/mlp/wi/w", "head/w",
+                 "embed/table", "layers/attn/wq/w"):
+        assert _base_rule(pstr, ag) == _base_rule(pstr, pim), pstr
+
+
+# ---------------------------------------------------------------------------
+# multi-stack decode offload
+# ---------------------------------------------------------------------------
+
+
+def test_decode_offload_multi_stack_analytic():
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=4, stacks=4)
+    for _ in range(3):
+        rec = off.step(4)
+    assert rec.reuse_bytes == off.weight_bytes     # weights amortized
+    roof = off.roofline()
+    assert roof["stacks"] == 4
+    uploads = roof["upload_bytes_per_stack"]
+    assert len(uploads) == 4 and all(u > 0 for u in uploads)
+    assert sum(uploads) == off.upload_bytes
+    assert roof["host_link_bytes"] == 0            # stack-restricted ops
+
+
+def test_decode_offload_multi_stack_matches_single_stack_cycles():
+    # stack-restricted ops use the same channels-wide decomposition, so
+    # per-step pim cycles are identical to a single stack of that width
+    cfg = get("qwen3-1.7b").reduced()
+    off1 = DecodeOffload(cfg, channels=4, stacks=1)
+    off4 = DecodeOffload(cfg, channels=4, stacks=4)
+    r1, r4 = off1.step(2), off4.step(2)
+    assert r1.pim_cycles == r4.pim_cycles
+    assert r1.h2d_bytes == r4.h2d_bytes
+
+
+def test_decode_offload_homes_whole_layer_on_one_stack():
+    # one layer's attention, experts, and router share a home stack
+    # (ame_pim layers map), lm_head follows the last layer
+    cfg = get("mixtral-8x22b").reduced()
+    assert cfg.moe is not None
+    off = DecodeOffload(cfg, channels=4, stacks=2)
+    homes = {m.name: [h for h, _ in handles]
+             for m, handles in off.weights}
+    active = cfg.moe.top_k + cfg.moe.n_shared
+    for ell in range(cfg.n_layers):
+        layer_home = homes["attn.wq"][ell]
+        assert homes["attn.wo"][ell] == layer_home
+        assert homes["moe.router"][ell] == layer_home
+        for slot in range(active):
+            assert homes["moe.expert.wi"][ell * active + slot] == layer_home
+    assert homes["lm_head"] == [homes["attn.wq"][cfg.n_layers - 1]]
+    rec = off.step(2)
+    assert rec.reuse_bytes == off.weight_bytes
+    assert off.roofline()["host_link_bytes"] == 0
+
+
+@pytest.mark.slow
+def test_decode_offload_multi_stack_numeric_crosschecks_xla():
+    cfg = get("qwen3-1.7b").reduced()
+    off = DecodeOffload(cfg, channels=4, stacks=4, numeric=True)
+    rec = off.step(2)
+    assert rec.numeric and rec.numeric_max_err < off.atol
+    assert rec.logits_max_err < off.atol
+    assert off.last_logits is not None

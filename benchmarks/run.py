@@ -18,6 +18,7 @@ trajectory of the harness itself is tracked across PRs (CI's
   PYTHONPATH=src python -m benchmarks.run residency  # resident operands
   PYTHONPATH=src python -m benchmarks.run engine     # fast-path gates
   PYTHONPATH=src python -m benchmarks.run cluster    # multi-stack scaling
+  PYTHONPATH=src python -m benchmarks.run decode     # async decode overlap
 """
 from __future__ import annotations
 
@@ -82,16 +83,17 @@ def write_bench_runtime(section_s: dict) -> None:
     the artifact exists to track across PRs.
     """
     from benchmarks.paper_figures import LAST_CLUSTER_METRICS, \
-        LAST_ENGINE_METRICS
+        LAST_DECODE_METRICS, LAST_ENGINE_METRICS
     BENCH_RUNTIME.parent.mkdir(parents=True, exist_ok=True)
     rec = {"generated_by": "benchmarks.run", "section_wall_s": {},
-           "engine": {}, "cluster": {}}
+           "engine": {}, "cluster": {}, "decode": {}}
     if BENCH_RUNTIME.exists():
         try:
             prev = json.load(open(BENCH_RUNTIME))
             rec["section_wall_s"] = prev.get("section_wall_s", {})
             rec["engine"] = prev.get("engine", {})
             rec["cluster"] = prev.get("cluster", {})
+            rec["decode"] = prev.get("decode", {})
         except (OSError, ValueError):
             pass
     rec["section_wall_s"].update(
@@ -102,6 +104,8 @@ def write_bench_runtime(section_s: dict) -> None:
                           for k, v in LAST_ENGINE_METRICS.items()})
     rec["cluster"].update({k: round(v, 6)
                            for k, v in LAST_CLUSTER_METRICS.items()})
+    rec["decode"].update({k: round(v, 6)
+                          for k, v in LAST_DECODE_METRICS.items()})
     with open(BENCH_RUNTIME, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -23,6 +23,18 @@ Setup costs: CRF programming + mode transitions per AME instruction
 (SETUP_CRF) and per-PEP-launch re-trigger/row-activate (SETUP_INVOKE);
 chosen such that setup is <1% of runtime at max tile size (paper §4.2) and
 dominates at small tiles (paper Fig 9).
+
+These costs are the single source of per-op busy time for *both*
+execution models of the runtime scheduler: the serialized barrier-per-op
+mode and the async dependency-aware timeline
+(:mod:`repro.runtime.timeline`) consume identical per-channel cycle
+charges — the timeline only decides *when* each busy interval starts
+(``max(dep retire, channel free, link free)``), never what it costs, so
+start/retire times inherit the calibration unchanged.  The setup-
+dominated small-tile regime (Fig 9) is also why the async decode DAG
+wins: decode-shaped matmuls pay launch floors per channel, so running
+independent ops on disjoint channel groups removes serialized floors
+without inflating per-op work.
 """
 from __future__ import annotations
 

@@ -20,8 +20,12 @@ pseudo-channel) -> **this runtime** (multi-pseudo-channel stack).  See
                placement, dispatches per-channel command streams
                asynchronously (makespan = max over channels), overlaps
                transfers with PEP execution, reports RuntimeReport
+  timeline   — async dependency-aware op timeline (async_mode=True):
+               OpHandle futures, per-channel + per-link clocks, shard
+               starts at max(dep retire, channel free, link free)
   trace      — HBM-PIMulator-compatible command-trace emitter + parser
-               (resident reuses round-trip as replay-neutral comments)
+               (resident reuses and async TSTART/TEND schedule markers
+               round-trip as replay-neutral comments)
 """
 from repro.runtime.cluster import (
     HOST_LINK_BANDWIDTH_BYTES_PER_S,
@@ -49,6 +53,7 @@ from repro.runtime.placement import (
     row_striped,
     shard_mac_passes,
     stack_restricted_shards,
+    subset_shards,
     validate_cover,
 )
 from repro.runtime.residency import BYTES_PER_ELEM, DeviceTensor, box_bytes
@@ -60,7 +65,14 @@ from repro.runtime.scheduler import (
     pim_gemm,
     pim_gemv,
 )
-from repro.runtime.trace import TraceStats, dump_trace, emit_trace, parse_trace
+from repro.runtime.timeline import OpHandle, Timeline
+from repro.runtime.trace import (
+    TraceStats,
+    dump_trace,
+    emit_trace,
+    parse_trace,
+    strip_timestamps,
+)
 
 __all__ = [
     "HOST_LINK_BANDWIDTH_BYTES_PER_S", "HOST_LINK_BYTES_PER_CYCLE",
@@ -69,9 +81,12 @@ __all__ = [
     "TRANSFER_BYTES_PER_COMMAND", "transfer_cycles",
     "PLACEMENTS", "Shard", "balanced", "block_2d", "box_contains",
     "cluster_shards", "get_placement", "placement_shards", "row_striped",
-    "shard_mac_passes", "stack_restricted_shards", "validate_cover",
+    "shard_mac_passes", "stack_restricted_shards", "subset_shards",
+    "validate_cover",
     "BYTES_PER_ELEM", "DeviceTensor", "box_bytes",
     "ENGINE_MODES", "ChannelReport", "PIMRuntime", "RuntimeReport",
     "pim_gemm", "pim_gemv",
+    "OpHandle", "Timeline",
     "TraceStats", "dump_trace", "emit_trace", "parse_trace",
+    "strip_timestamps",
 ]

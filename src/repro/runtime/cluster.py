@@ -72,6 +72,11 @@ class HostLinkLedger:
     bytes: int = 0
     cycles: int = 0
     events: List[Tuple[str, int]] = dataclasses.field(default_factory=list)
+    # async-timeline link clock (repro.runtime.timeline): the cycle the
+    # shared link next comes free.  Only an async_mode runtime advances
+    # it; serialized mode keeps link time on its own axis instead
+    # (RuntimeReport.cluster_makespan_cycles).
+    tl_free: float = 0.0
 
     def charge(self, kind: str, nbytes: int) -> int:
         assert kind in ("xstack", "drain"), kind

@@ -129,6 +129,10 @@ class PIMDevice:
         self.reuse_bytes = 0    # h2d avoided by cross-op operand residency
         self.dedupe_bytes = 0   # h2d avoided by within-op slice dedupe
         self.spill_bytes = 0    # resident bytes evicted under capacity
+        # async-timeline channel clock (repro.runtime.timeline): the
+        # cycle this channel next comes free.  Only an async_mode
+        # runtime advances it; the serialized mode leaves it at 0.
+        self.tl_free = 0.0
 
     # -- compute ledger ------------------------------------------------------
 

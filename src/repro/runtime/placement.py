@@ -278,3 +278,29 @@ def stack_restricted_shards(policy: str, m: int, k: int, n: int,
     to ``stack``."""
     flat = placement_shards(policy, m, k, n, channels_per_stack)
     return tuple(dataclasses.replace(s, stack=stack) for s in flat)
+
+
+@functools.lru_cache(maxsize=4096)
+def subset_shards(policy: str, m: int, k: int, n: int,
+                  flat_channels: Tuple[int, ...],
+                  channels_per_stack: int) -> Tuple[Shard, ...]:
+    """Memoized decomposition of one op onto an explicit *subset* of a
+    stack's (or cluster's) flat channel ids.
+
+    The async scheduler runs independent ops of one dependency level on
+    disjoint channel groups — q/k/v of a decode layer concurrently on
+    their home stack's channels — so the placement policy runs over
+    ``len(flat_channels)`` virtual channels and each virtual id maps to
+    its flat id (then splits into ``(stack, channel)``).  The same
+    subset used for ``place`` and the consuming ops yields identical
+    shard geometry, so residency hits exactly as on full-width ops.
+    """
+    if len(set(flat_channels)) != len(flat_channels):
+        raise ValueError(f"duplicate channel ids in subset {flat_channels}")
+    flat = placement_shards(policy, m, k, n, len(flat_channels))
+    out = []
+    for s in flat:
+        f = flat_channels[s.channel]
+        out.append(dataclasses.replace(
+            s, stack=f // channels_per_stack, channel=f % channels_per_stack))
+    return tuple(out)

@@ -66,11 +66,25 @@ Both fast paths record one :class:`~repro.core.engine.ShardSpan` per
 shard instead of per-tile instruction records; the trace emitter expands
 spans back to the identical per-tile command stream, so
 ``emit_trace``/``parse_trace`` round-trips are unchanged.
+
+``PIMRuntime(async_mode=True)`` layers the dependency-aware timeline of
+:mod:`repro.runtime.timeline` on top: ops return :class:`OpHandle`
+futures instead of ``(out, report)``, dependencies are inferred from
+resident :class:`DeviceTensor` reads/writes (plus explicit ``after=``
+edges), and each op's per-channel busy intervals start at ``max(dep
+retire, channel free, link free)`` instead of a global barrier — so
+independent ops interleave on disjoint channels and host-link windows
+block only their dependents.  Ops may also target an explicit channel
+subset (``channels=``), the lever the async decode offload uses to run
+q/k/v and gate/up concurrently on one stack.  Ledgers, numerics, and
+traces are unchanged by async mode (the timeline adds only
+replay-neutral ``# TSTART``/``# TEND`` trace markers); with the default
+``async_mode=False`` nothing here runs at all.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple, Union
+from typing import Dict, List, Optional, Sequence, Set, Tuple, Union
 
 import jax.numpy as jnp
 import numpy as np
@@ -90,9 +104,10 @@ from repro.core.isa import PIM_FREQ_HZ
 from repro.runtime.cluster import PIMCluster
 from repro.runtime.device import PIMDevice, PIMStack, transfer_cycles
 from repro.runtime.placement import Shard, cluster_shards, \
-    placement_shards, stack_restricted_shards
+    placement_shards, stack_restricted_shards, subset_shards
 from repro.runtime.residency import BYTES_PER_ELEM, Box, DeviceTensor, \
     box_bytes
+from repro.runtime.timeline import OpHandle, Timeline
 
 #: shard executor modes: "batched" = whole-shard jitted fast path (and
 #: closed-form analytic costs); "tiled" = the per-tile reference walk
@@ -290,12 +305,21 @@ class PIMRuntime:
     time to the synchronous-DMA model (no transfer/compute overlap);
     ``capacity_bytes`` bounds each channel's residency table (LRU
     eviction counted as spill).
+
+    ``async_mode=True`` attaches the dependency-aware
+    :class:`~repro.runtime.timeline.Timeline`: ops return
+    :class:`~repro.runtime.timeline.OpHandle` futures (``.result`` /
+    ``.report`` carry what the serialized mode returns), start times
+    respect inferred DeviceTensor dependencies plus explicit ``after=``
+    edges, and ``self.timeline.now`` is the async wall-clock.  Ledgers
+    and traces stay identical to serialized mode.
     """
 
     def __init__(self, channels: int = 1, stack: Optional[PIMStack] = None,
                  engine: str = "batched", stacks: int = 1,
                  overlap: bool = True,
-                 capacity_bytes: Optional[int] = None):
+                 capacity_bytes: Optional[int] = None,
+                 async_mode: bool = False):
         assert engine in ENGINE_MODES, engine
         if stack is not None:
             if stacks != 1 or capacity_bytes is not None:
@@ -313,6 +337,12 @@ class PIMRuntime:
         self.overlap = overlap
         self._cluster = self.stack if isinstance(self.stack, PIMCluster) \
             else None
+        self.async_mode = async_mode
+        self.timeline: Optional[Timeline] = \
+            Timeline(self.stack, self._cluster) if async_mode else None
+        # dep inference: tensor uid -> the OpHandle that last wrote it
+        # (place uploads and keep_output results); readers wait on it
+        self._writers: Dict[int, OpHandle] = {}
 
     # -- internals -----------------------------------------------------------
 
@@ -326,8 +356,30 @@ class PIMRuntime:
         return self._cluster.n_stacks if self._cluster else 1
 
     def _shards(self, placement: str, m: int, k: int, n: int,
-                stack: Optional[int]) -> Tuple[Shard, ...]:
-        """Resolve the op's shard decomposition, stack axis included."""
+                stack: Optional[int],
+                channels: Optional[Sequence[int]] = None
+                ) -> Tuple[Shard, ...]:
+        """Resolve the op's shard decomposition, stack axis included.
+
+        ``channels`` restricts the op to an explicit subset of flat
+        channel ids (the async concurrent-group regime); ``stack``
+        restricts to one whole stack of a cluster.  They are mutually
+        exclusive.
+        """
+        if channels is not None:
+            if stack is not None:
+                raise ValueError(
+                    "pass stack= or channels=, not both — a channel "
+                    "subset already pins the op's devices")
+            chans = tuple(sorted(channels))
+            total = len(self.stack)
+            if not chans or not all(0 <= c < total for c in chans):
+                raise ValueError(
+                    f"channel subset {chans} out of range for "
+                    f"{total} flat channels")
+            cps = self._cluster.channels_per_stack if self._cluster \
+                else len(self.stack)
+            return subset_shards(placement, m, k, n, chans, cps)
         if self._cluster is None:
             if stack is not None:
                 raise ValueError(
@@ -370,13 +422,49 @@ class PIMRuntime:
             return (0, 0)
         return (self._cluster.link.bytes, self._cluster.link.cycles)
 
-    def _op_devices(self, stack: Optional[int]) -> List[PIMDevice]:
-        """Devices participating in an op: one stack's under a ``stack=``
-        restriction, the whole stack/cluster otherwise — so restricted
-        ops snapshot and report only the channels that can do work."""
+    def _op_devices(self, stack: Optional[int],
+                    channels: Optional[Sequence[int]] = None
+                    ) -> List[PIMDevice]:
+        """Devices participating in an op: the explicit subset under a
+        ``channels=`` restriction, one stack's under ``stack=``, the
+        whole stack/cluster otherwise — so restricted ops snapshot and
+        report only the channels that can do work."""
+        if channels is not None:
+            return [self.stack[c] for c in sorted(channels)]
         if stack is None or self._cluster is None:
             return list(self.stack)
         return self._cluster.stacks[stack].devices
+
+    def _submit_async(self, name: str, busy: Dict[int, float],
+                      link_cycles: int, marks: Dict[int, int],
+                      reads: Sequence[int], writes: Sequence[int],
+                      after: Optional[Sequence[OpHandle]],
+                      report: Optional[RuntimeReport],
+                      result) -> OpHandle:
+        """Register one executed op on the timeline (async mode only).
+
+        ``marks`` holds each participating device's event-stream length
+        from before the op ran — the insertion point for the op's
+        ``# TSTART`` marker, so timestamps wrap exactly the events the
+        op appended and stripping them recovers the serialized trace
+        byte-for-byte.
+        """
+        deps: List[OpHandle] = []
+        seen: Set[int] = set()
+        for h in [self._writers.get(uid) for uid in reads] \
+                + list(after or ()):
+            if h is not None and h.op_id not in seen:
+                deps.append(h)
+                seen.add(h.op_id)
+        handle = self.timeline.submit(name, busy, link_cycles, deps,
+                                      report=report, result=result)
+        for uid in writes:
+            self._writers[uid] = handle
+        for ch, (start, b) in handle.spans.items():
+            dev = self.stack[ch]
+            dev.events.insert(marks[ch], ("tstart", (handle.op_id, start)))
+            dev.events.append(("tend", (handle.op_id, start + b)))
+        return handle
 
     def _finish(self, op: str, shape: Tuple[int, ...], placement: str,
                 before: Dict[int, "object"],
@@ -457,7 +545,8 @@ class PIMRuntime:
 
     def place(self, array, *, placement: str = "balanced", role: str = "A",
               other_dim: int = 1,
-              stack: Optional[int] = None) -> DeviceTensor:
+              stack: Optional[int] = None,
+              channels: Optional[Sequence[int]] = None) -> DeviceTensor:
         """Upload an array's shards onto the stack; returns a resident
         :class:`DeviceTensor` handle.
 
@@ -474,7 +563,11 @@ class PIMRuntime:
         multi-stack runtime, ``stack=`` pins the whole tensor to one
         stack (consume it with the same ``stack=`` on ops); the default
         spreads shards over every stack, charging the host link where a
-        replicated box lands on more than one stack.
+        replicated box lands on more than one stack.  ``channels=`` pins
+        the tensor to an explicit flat-channel subset instead (consume
+        it with the same ``channels=`` on ops); on an async runtime the
+        upload itself becomes a timeline op, so every consumer of the
+        handle starts after the weights have landed.
         """
         if isinstance(array, tuple):
             arr, shape = None, tuple(array)
@@ -489,14 +582,20 @@ class PIMRuntime:
         handle = DeviceTensor(self.stack, shape, values=arr)
         if role == "A":
             m, k = shape
-            shards = self._shards(placement, m, k, other_dim, stack)
+            shards = self._shards(placement, m, k, other_dim, stack,
+                                  channels)
             boxes = [(s, s.a_box) for s in shards]
         elif role == "B":
             k, n = shape
-            shards = self._shards(placement, other_dim, k, n, stack)
+            shards = self._shards(placement, other_dim, k, n, stack,
+                                  channels)
             boxes = [(s, s.b_box) for s in shards]
         else:
             raise ValueError(f"role must be 'A' or 'B', got {role!r}")
+        op_devs = self._op_devices(stack, channels)
+        marks = {d.channel_id: len(d.events) for d in op_devs}
+        before_h2d = {d.channel_id: d.xfer.h2d_cycles for d in op_devs}
+        link_before = self._link_before()
         link_seen: Dict = {}
         for s, box in boxes:
             flat = self._flat(s)
@@ -507,6 +606,15 @@ class PIMRuntime:
                 self._link_charge_ship((role, handle.uid, box), s.stack,
                                        box_bytes(box), link_seen)
             handle.mark_resident(flat, box)
+        if self.timeline is not None:
+            busy = {d.channel_id:
+                    float(d.xfer.h2d_cycles - before_h2d[d.channel_id])
+                    for d in op_devs}
+            self._submit_async(
+                "place", busy,
+                self._link_before()[1] - link_before[1], marks,
+                reads=(), writes=(handle.uid,), after=None,
+                report=None, result=handle)
         return handle
 
     # -- GEMM / GEMV ---------------------------------------------------------
@@ -516,9 +624,11 @@ class PIMRuntime:
              execute: bool = True,
              keep_output: bool = False,
              engine: Optional[str] = None,
-             stack: Optional[int] = None
-             ) -> Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
-                        RuntimeReport]:
+             stack: Optional[int] = None,
+             channels: Optional[Sequence[int]] = None,
+             after: Optional[Sequence[OpHandle]] = None
+             ) -> Union[Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
+                              RuntimeReport], OpHandle]:
         """C = A(m,k) @ B(k,n) partitioned across the stack's channels.
 
         ``a``/``b`` may be host arrays or resident :class:`DeviceTensor`
@@ -529,7 +639,14 @@ class PIMRuntime:
         ("batched"/"tiled") for this op.  On a multi-stack runtime,
         ``stack=`` restricts the op to one stack's channels; the default
         decomposes over every stack and charges inter-stack traffic on
-        the host link.
+        the host link.  ``channels=`` restricts to an explicit flat
+        channel subset instead (concurrent-group regime).
+
+        On an async runtime the call returns an :class:`OpHandle`
+        (``.result`` / ``.report`` carry this tuple's values) whose
+        timeline start respects inferred DeviceTensor dependencies plus
+        the explicit ``after=`` handles; serialized runtimes ignore
+        ``after=`` (program order already implies it).
         """
         mode = self._engine_mode(engine)
         ah, a_vals, (m, k) = _unwrap(a, self.stack)
@@ -538,9 +655,10 @@ class PIMRuntime:
         assert not execute or (a_vals is not None and b_vals is not None), \
             "analytic (shape-only) DeviceTensor operands require " \
             "execute=False"
-        shards = self._shards(placement, m, k, n, stack)
+        shards = self._shards(placement, m, k, n, stack, channels)
 
-        op_devs = self._op_devices(stack)
+        op_devs = self._op_devices(stack, channels)
+        marks = {d.channel_id: len(d.events) for d in op_devs}
         before = {d.channel_id: d.snapshot() for d in op_devs}
         link_before = self._link_before()
         lead_in: Dict[int, int] = {}
@@ -630,16 +748,27 @@ class PIMRuntime:
         report = self._finish("gemm", (m, k, n), placement, before,
                               lead_in, link_before=link_before,
                               devices=op_devs)
-        if keep_output:
-            return out_handle, report
-        return (jnp.asarray(out) if execute else None), report
+        result = out_handle if keep_output \
+            else (jnp.asarray(out) if execute else None)
+        if self.timeline is not None:
+            return self._submit_async(
+                "gemm",
+                {c.channel: c.busy_cycles for c in report.per_channel},
+                report.host_link_cycles, marks,
+                reads=[h.uid for h in (ah, bh) if h is not None],
+                writes=(out_handle.uid,) if keep_output else (),
+                after=after, report=report, result=result)
+        return result, report
 
     def gemv(self, a: Operand, x: jnp.ndarray, *,
              placement: str = "row-striped",
              execute: bool = True,
              engine: Optional[str] = None,
-             stack: Optional[int] = None
-             ) -> Tuple[Optional[jnp.ndarray], RuntimeReport]:
+             stack: Optional[int] = None,
+             channels: Optional[Sequence[int]] = None,
+             after: Optional[Sequence[OpHandle]] = None
+             ) -> Union[Tuple[Optional[jnp.ndarray], RuntimeReport],
+                        OpHandle]:
         """y = A @ x (the MPC-Wrapper comparison workload), as N=1 GEMM.
 
         ``a`` may be a resident handle (the serve-loop decode regime:
@@ -648,9 +777,17 @@ class PIMRuntime:
         """
         assert not isinstance(x, DeviceTensor), \
             "gemv x must be a host vector; place A instead"
-        y, rep = self.gemm(a, np.asarray(x, F16)[:, None],
-                           placement=placement, execute=execute,
-                           engine=engine, stack=stack)
+        res = self.gemm(a, np.asarray(x, F16)[:, None],
+                        placement=placement, execute=execute,
+                        engine=engine, stack=stack, channels=channels,
+                        after=after)
+        if isinstance(res, OpHandle):
+            res.name = "gemv"
+            res.report = dataclasses.replace(res.report, op="gemv")
+            if res.result is not None:
+                res.result = res.result[:, 0]
+            return res
+        y, rep = res
         rep = dataclasses.replace(rep, op="gemv")
         return (y[:, 0] if y is not None else None), rep
 
@@ -661,9 +798,12 @@ class PIMRuntime:
                     execute: bool = True,
                     keep_output: bool = False,
                     engine: Optional[str] = None,
-                    stack: Optional[int] = None
-                    ) -> Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
-                               RuntimeReport]:
+                    stack: Optional[int] = None,
+                    channels: Optional[Sequence[int]] = None,
+                    after: Optional[Sequence[OpHandle]] = None
+                    ) -> Union[
+                        Tuple[Optional[Union[jnp.ndarray, DeviceTensor]],
+                              RuntimeReport], OpHandle]:
         """out = a <kind> b partitioned over the (M, C) output grid.
 
         Placements reuse the GEMM shard geometry with the column axis in
@@ -684,9 +824,10 @@ class PIMRuntime:
         assert not execute or (a_vals is not None and b_vals is not None), \
             "analytic (shape-only) DeviceTensor operands require " \
             "execute=False"
-        shards = self._shards(placement, m, c, 1, stack)
+        shards = self._shards(placement, m, c, 1, stack, channels)
 
-        op_devs = self._op_devices(stack)
+        op_devs = self._op_devices(stack, channels)
+        marks = {d.channel_id: len(d.events) for d in op_devs}
         before = {d.channel_id: d.snapshot() for d in op_devs}
         link_before = self._link_before()
         lead_in: Dict[int, int] = {}
@@ -738,9 +879,17 @@ class PIMRuntime:
         report = self._finish(f"ew-{kind}", (m, c), placement, before,
                               lead_in, link_before=link_before,
                               devices=op_devs)
-        if keep_output:
-            return out_handle, report
-        return (jnp.asarray(out) if execute else None), report
+        result = out_handle if keep_output \
+            else (jnp.asarray(out) if execute else None)
+        if self.timeline is not None:
+            return self._submit_async(
+                f"ew-{kind}",
+                {cr.channel: cr.busy_cycles for cr in report.per_channel},
+                report.host_link_cycles, marks,
+                reads=[h.uid for h in (ah, bh) if h is not None],
+                writes=(out_handle.uid,) if keep_output else (),
+                after=after, report=report, result=result)
+        return result, report
 
 
 # ---------------------------------------------------------------------------

@@ -40,6 +40,18 @@ A single-stack cluster emits none of these (no ``# STACK 0``), so its
 trace is byte-identical to a bare :class:`PIMStack`'s; ``# SPILL`` lines
 appear on bare stacks too when a capacity bound evicts.
 
+Async-mode runtimes (``PIMRuntime(async_mode=True)``) additionally wrap
+each op's per-channel events in timestamped markers from the timeline
+scheduler::
+
+    # TSTART <channel> <op_id> <cycles>   -- the op's busy interval opens
+    # TEND <channel> <op_id> <cycles>     -- ... and retires
+
+Both are comment-shaped (external replay skips them) and round-trip
+through :func:`parse_trace` (``op_starts`` / ``op_ends``); they carry
+*schedule* only, never commands, so :func:`strip_timestamps` recovers a
+serialized run's trace byte-for-byte when the op stream is the same.
+
 Traces are *expanded* (one line per command): dump small ops, not the
 benchmark sweep shapes.
 """
@@ -215,6 +227,11 @@ def _emit_device(lines: List[str], dev) -> None:
             # capacity eviction: no transactions now — the re-ship is a
             # real MEM write when the evicted operand next misses
             lines.append(f"# SPILL {dev.channel_id} {payload}")
+        elif kind in ("tstart", "tend"):
+            # async-timeline schedule markers: zero commands, pure timing
+            op_id, cycles = payload
+            tag = "TSTART" if kind == "tstart" else "TEND"
+            lines.append(f"# {tag} {dev.channel_id} {op_id} {cycles:.3f}")
         elif kind == "instr":
             # whole-shard spans (the fast paths' aggregated records)
             # expand to the identical per-tile instruction sequence,
@@ -256,6 +273,19 @@ def emit_trace(stack) -> str:
     return "\n".join(lines) + "\n"
 
 
+def strip_timestamps(text: str) -> str:
+    """Drop the async scheduler's ``# TSTART``/``# TEND`` marker lines.
+
+    An async run over the same op stream differs from a serialized run
+    only by these markers (the timeline places busy intervals, it never
+    reorders or changes commands), so the stripped async trace is
+    byte-identical to the serialized trace — the invariant the tests
+    pin.
+    """
+    return "\n".join(ln for ln in text.split("\n")
+                     if not _TS_LINE_RE.match(ln))
+
+
 def dump_trace(stack: PIMStack, path: str) -> int:
     """Write the stack's trace to ``path``; returns the line count."""
     text = emit_trace(stack)
@@ -290,6 +320,13 @@ class TraceStats:
         default_factory=collections.Counter)       # per channel
     spill_bytes: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)       # per channel
+    # -- async-timeline schedule markers: (channel, op_id) -> cycles.
+    # Empty on serialized traces; stripping the marker lines from an
+    # async trace recovers the serialized byte stream ------------------
+    op_starts: Dict[Tuple[int, int], float] = dataclasses.field(
+        default_factory=dict)
+    op_ends: Dict[Tuple[int, int], float] = dataclasses.field(
+        default_factory=dict)
     # -- cluster dimension: on single-stack traces the per-stack counters
     # accumulate under stack 0 (no # STACK markers exist to switch on) —
     # use ``stacks_seen`` (empty unless markers appeared) to distinguish
@@ -320,6 +357,9 @@ _RESIDENT_RE = re.compile(r"^# RESIDENT (\d+) (\d+)$")
 _STACK_RE = re.compile(r"^# STACK (\d+)$")
 _HOSTLINK_RE = re.compile(r"^# HOSTLINK (xstack|drain) (\d+)$")
 _SPILL_RE = re.compile(r"^# SPILL (\d+) (\d+)$")
+_TSTART_RE = re.compile(r"^# TSTART (\d+) (\d+) ([0-9.]+)$")
+_TEND_RE = re.compile(r"^# TEND (\d+) (\d+) ([0-9.]+)$")
+_TS_LINE_RE = re.compile(r"^# T(?:START|END) ")
 _MEM_RE = re.compile(r"^([RW]) MEM (\d+) (\d+) (\d+)$")
 _PIM_RE = re.compile(r"^PIM ([A-Z]+)((?: [A-Z]+,\d+)*)$")
 _CFR_RE = re.compile(r'^W CFR "(\d+)" ([A-Z]+)$')
@@ -357,6 +397,16 @@ def parse_trace(text: str) -> TraceStats:
         if mm:
             stats.resident_reuses[int(mm.group(1))] += 1
             stats.resident_bytes[int(mm.group(1))] += int(mm.group(2))
+            continue
+        mm = _TSTART_RE.match(line)
+        if mm:
+            stats.op_starts[(int(mm.group(1)), int(mm.group(2)))] = \
+                float(mm.group(3))
+            continue
+        mm = _TEND_RE.match(line)
+        if mm:
+            stats.op_ends[(int(mm.group(1)), int(mm.group(2)))] = \
+                float(mm.group(3))
             continue
         if line.startswith("#"):
             continue

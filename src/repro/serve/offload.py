@@ -29,12 +29,27 @@ sidecar's (execute/analytic parity is property-tested), so the roofline
 trajectory is unchanged; the numerics close the ROADMAP
 "numeric decode-on-PIM" item.
 
+``async_mode=True`` replaces the barrier-per-op accounting with the
+runtime's dependency-aware timeline (:mod:`repro.runtime.timeline`):
+each decode step is submitted as an op DAG — q/k/v concurrent, attention
+output as the join, gate/up concurrent, router before its experts — with
+every concurrency group placed on *disjoint channel groups* of the home
+stack (per-op launch floors dominate decode-shaped matmuls, so giving
+independent ops their own channels beats re-serializing them over the
+full width), and :meth:`DecodeOffload.pipeline` wave-pipelines a batch
+of independent decode requests: layer blocks on different home stacks
+process different requests concurrently.  Serialized mode is the
+default and is byte-identical in ledgers and traces to the previous
+behavior.
+
 ``dump`` writes the trajectory as ``results/dryrun/*.pim_offload.json``
 so future changes to the cost model have a BENCH baseline to diff.
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import hashlib
 import json
 from typing import Dict, List, Optional, Tuple
 
@@ -44,7 +59,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core.isa import PIM_FREQ_HZ
 from repro.launch import hw
-from repro.runtime import BYTES_PER_ELEM, DeviceTensor, PIMRuntime
+from repro.runtime import BYTES_PER_ELEM, DeviceTensor, OpHandle, PIMRuntime
 from repro.sharding.rules import ame_pim_stack_map
 
 F16 = np.float16
@@ -52,6 +67,13 @@ F16 = np.float16
 #: numeric mode materializes every decode weight on the host — refuse
 #: configs past this, the regime stays "small config, cross-check"
 NUMERIC_MAX_WEIGHT_BYTES = 64 << 20
+
+#: XLA FP32 references, content-addressed: (sha1(weight bytes), batch)
+#: -> reference output.  Module-level so offload instances over the
+#: same seeded weights (the engine bench's tiled/batched pair) share
+#: entries; weights are immutable after placement and activations are
+#: deterministic per (in_dim, batch), so entries never go stale.
+_REF_CACHE: Dict[Tuple[bytes, int], np.ndarray] = {}
 
 #: |y_pim - y_xla| ceiling for the numeric cross-check.  The PIM engines
 #: round the accumulator to FP16 per ascending-k step while XLA
@@ -132,6 +154,116 @@ def decode_matmuls(cfg: ArchConfig) -> List[DecodeMatmul]:
 
 
 # ---------------------------------------------------------------------------
+# Async step DAG: stages, channel-group splits
+# ---------------------------------------------------------------------------
+
+#: dependency level of each matmul family inside one decoder layer —
+#: same level = no data dependency (submitted concurrently on disjoint
+#: channel groups), levels serialize.  Dense and MoE layers never mix
+#: families within one layer, so the shared level numbers are per-layer
+#: stage indices, not a global ordering.
+_STAGE_OF = {
+    "attn.wq": 0, "attn.wk": 0, "attn.wv": 0,     # independent projections
+    "attn.wo": 1,                                 # joins q/k/v (attention)
+    "mlp.wi": 2, "mlp.wg": 2,                     # gate/up concurrent
+    "moe.router": 2,                              # routing decision first
+    "mlp.wo": 3,
+    "moe.expert.wi": 3, "moe.expert.wg": 3,       # all active experts
+    "moe.expert.wo": 4,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class _AsyncOp:
+    """One weight matmul instance inside the async step DAG."""
+
+    name: str
+    out_dim: int
+    in_dim: int
+    handle: DeviceTensor
+    channels: Tuple[int, ...]     # flat channel ids the op (and its
+    #                               weight placement) is pinned to
+
+
+@functools.lru_cache(maxsize=None)
+def _probe_cycles(m: int, k: int, channels: int, placement: str,
+                  batch: int = 1) -> float:
+    """Makespan of one resident-weight (m, k) @ (k, batch) decode matmul
+    on ``channels`` channels — the split-search cost oracle.  A subset
+    op's shard geometry equals a ``len(subset)``-channel stack's, so a
+    throwaway analytic runtime measures exactly what the subset costs.
+    """
+    rt = PIMRuntime(channels=channels)
+    h = rt.place((m, k), placement=placement, other_dim=batch)
+    _, rep = rt.gemm(h, np.zeros((k, batch), F16), placement=placement,
+                     execute=False)
+    return rep.makespan_cycles
+
+
+@functools.lru_cache(maxsize=None)
+def _group_split(shapes: Tuple[Tuple[int, int], ...], n_channels: int,
+                 placement: str, batch: int = 1) -> Tuple[int, ...]:
+    """Channel counts for one concurrency group's ops (sum =
+    ``n_channels``, each >= 1).
+
+    Starts proportional to each op's weight volume (largest remainder),
+    then greedily moves single channels toward the bottleneck op while
+    the group's makespan — max over ops of the probed subset makespan —
+    improves.  The probe is exact, so AAM-aligned K-split quantization
+    (a 5-channel split may cost the same as 4) is accounted, not
+    approximated.  ``batch`` is the decode batch the split is tuned for
+    (splits are fixed at weight-placement time; ``DecodeOffload``'s
+    ``split_batch=`` chooses the regime, default single-slot decode).
+    """
+    g = len(shapes)
+    assert 1 <= g <= n_channels, (g, n_channels)
+    if g == 1:
+        return (n_channels,)
+    works = [m * k for m, k in shapes]
+    tot = sum(works)
+    raw = [n_channels * w / tot for w in works]
+    alloc = [max(1, int(r)) for r in raw]
+    while sum(alloc) > n_channels:      # min-1 clamping may overshoot
+        # only donors above the floor: a clamped tiny op (raw < 1) is
+        # exactly the entry the overshoot metric favors, and must keep
+        # its channel — one exists since sum > n_channels >= g
+        i = max((i for i in range(g) if alloc[i] > 1),
+                key=lambda i: (alloc[i] - raw[i], alloc[i]))
+        alloc[i] -= 1
+    order = sorted(range(g), key=lambda i: raw[i] - alloc[i], reverse=True)
+    for i in order:                     # largest remainder first
+        if sum(alloc) == n_channels:
+            break
+        alloc[i] += 1
+    while sum(alloc) < n_channels:      # g > remainders: round-robin
+        alloc[min(range(g), key=lambda i: alloc[i])] += 1
+
+    def times(a):
+        return [_probe_cycles(shapes[i][0], shapes[i][1], a[i], placement,
+                              batch)
+                for i in range(g)]
+
+    cur = times(alloc)
+    for _ in range(4 * n_channels):
+        best = None
+        for i in range(g):              # grow the bottleneck...
+            for j in range(g):          # ...at any donor's expense
+                if i == j or alloc[j] <= 1:
+                    continue
+                trial = list(alloc)
+                trial[i] += 1
+                trial[j] -= 1
+                tt = times(trial)
+                if max(tt) < max(cur) and \
+                        (best is None or max(tt) < max(best[1])):
+                    best = (trial, tt)
+        if best is None:
+            break
+        alloc, cur = best[0], best[1]
+    return tuple(alloc)
+
+
+# ---------------------------------------------------------------------------
 # Per-step records and the offload sidecar
 # ---------------------------------------------------------------------------
 
@@ -153,6 +285,8 @@ class StepRecord:
     numeric: bool = False       # matmuls executed on the engines this step
     numeric_max_err: float = 0.0    # max |y_pim - y_xla| over the step
     logits_max_err: float = 0.0     # same, lm_head output only
+    overlapped: bool = False    # async DAG step: pim_cycles is the
+    #                             timeline makespan, not a sum of ops
 
     @property
     def pim_vs_host(self) -> float:
@@ -192,20 +326,48 @@ class DecodeOffload:
     upload distribution, and the host-link ledger all scale past one
     stack while numerics and per-op ledgers stay those of a
     ``channels``-wide decomposition.
+
+    ``async_mode=True`` switches the runtime to the dependency-aware
+    timeline and each step to an op DAG: independent matmuls of one
+    layer (q/k/v; gate/up; a routing level's experts) are placed on
+    disjoint channel groups of their home stack (:func:`_group_split`)
+    and submitted concurrently; dependent levels chain with ``after=``
+    edges.  ``pim_cycles`` then reports the step's *timeline makespan*
+    (``StepRecord.overlapped``), and :meth:`pipeline` wave-pipelines a
+    batch of independent single-slot decode requests across the layer
+    blocks' home stacks.
+
+    Reproducibility: weights *and* per-step activations derive
+    deterministically from the constructor's ``seed=`` (activations from
+    per-``(in_dim, batch)`` child generators, so their values do not
+    depend on draw order or weight count) — repeated offload runs in one
+    process see identical data, and the XLA FP32 reference of each
+    numeric matmul is cached per ``(weight, batch)`` key instead of
+    recomputed every step.  The deliberate trade: numeric steps of one
+    run now repeat the same accumulation pattern per (shape, batch)
+    instead of drawing fresh values per step — vary ``seed=`` (or
+    ``batch``) across runs to exercise different patterns.
     """
 
     def __init__(self, cfg: ArchConfig, *, channels: int = 16,
                  stacks: int = 1,
                  placement: str = "balanced", numeric: bool = False,
                  seed: int = 0, atol: float = NUMERIC_ATOL,
-                 engine: str = "batched"):
+                 engine: str = "batched", async_mode: bool = False,
+                 split_batch: int = 1):
         self.cfg = cfg
         self.placement = placement
         self.numeric = numeric
         self.atol = atol
         self.stacks = stacks
+        self.seed = seed
+        self.async_mode = async_mode
+        # the decode batch the async channel-group splits are tuned for
+        # (splits are fixed at weight-placement time — weights live on
+        # their groups — so pick the serving regime here, not per step)
+        self._split_batch = split_batch
         self.rt = PIMRuntime(channels=channels, stacks=stacks,
-                             engine=engine)
+                             engine=engine, async_mode=async_mode)
         self.matmuls = decode_matmuls(cfg)
         if numeric and self.weight_bytes > NUMERIC_MAX_WEIGHT_BYTES:
             raise ValueError(
@@ -222,21 +384,23 @@ class DecodeOffload:
         self.weights: List[Tuple[DecodeMatmul,
                                  List[Tuple[Optional[int],
                                             DeviceTensor]]]] = []
-        for m in self.matmuls:
-            homes = [layer_stacks[ell] for ell in self._family_layers(m)] \
-                if stacks > 1 else [None] * m.count
-            handles = []
-            for home in homes:
-                if numeric:
-                    w = (rng.standard_normal((m.out_dim, m.in_dim))
-                         * 0.05).astype(F16)
+        #: async step DAG: consecutive stages chain, ops within a stage
+        #: run concurrently on their disjoint channel groups
+        self._stages: List[List[_AsyncOp]] = []
+        self._step_tail: Optional[List[OpHandle]] = None
+        if async_mode:
+            self._build_async_plan(rng, layer_stacks)
+        else:
+            for m in self.matmuls:
+                homes = [layer_stacks[ell]
+                         for ell in self._family_layers(m)] \
+                    if stacks > 1 else [None] * m.count
+                handles = []
+                for home in homes:
                     handles.append((home, self.rt.place(
-                        w, placement=placement, stack=home)))
-                else:
-                    handles.append((home, self.rt.place(
-                        (m.out_dim, m.in_dim), placement=placement,
+                        self._draw_weight(rng, m), placement=placement,
                         stack=home)))
-            self.weights.append((m, handles))
+                self.weights.append((m, handles))
         self.upload_bytes = sum(d.xfer.h2d_bytes for d in self.rt.stack)
         self.upload_bytes_per_stack: Optional[List[int]] = None
         if stacks > 1:
@@ -245,8 +409,81 @@ class DecodeOffload:
                 for stk in self.rt.stack.stacks]
         self.steps: List[StepRecord] = []
         self.last_logits: Optional[np.ndarray] = None     # numeric mode
-        self._rng = rng
         self._act_cache: Dict[Tuple[int, int], np.ndarray] = {}
+        self._ref_keys: Dict[int, bytes] = {}    # weight uid -> content key
+
+    def _draw_weight(self, rng, m: DecodeMatmul):
+        """Weight payload for one instance of family ``m``: seeded FP16
+        values in numeric mode, a shape-only analytic handle spec
+        otherwise."""
+        if self.numeric:
+            return (rng.standard_normal((m.out_dim, m.in_dim))
+                    * 0.05).astype(F16)
+        return (m.out_dim, m.in_dim)
+
+    def _stack_channels(self, home: Optional[int]) -> Tuple[int, ...]:
+        """Flat channel ids of one home stack (all channels on 1 stack)."""
+        if home is None:
+            return tuple(range(len(self.rt.stack)))
+        cps = self.rt.stack.channels_per_stack
+        return tuple(range(home * cps, (home + 1) * cps))
+
+    def _build_async_plan(self, rng, layer_stacks: Optional[List[int]]
+                          ) -> None:
+        """Construct the per-layer stage DAG and place every weight on
+        its op's channel group.
+
+        Weight draw order is per layer (stage construction order), not
+        per family — values still derive only from ``seed``.  Groups
+        wider than the home stack's channel count split into serial
+        waves so every op keeps >= 1 channel.
+        """
+        # group each family's instances by decoder layer
+        per_layer: List[List[Tuple[int, DecodeMatmul]]] = \
+            [[] for _ in range(self.cfg.n_layers)]
+        lm_head: Optional[DecodeMatmul] = None
+        fam_handles: Dict[str, List[Tuple[Optional[int], DeviceTensor]]] \
+            = {m.name: [] for m in self.matmuls}
+        for m in self.matmuls:
+            if m.name == "lm_head":
+                lm_head = m
+                continue
+            for ell in self._family_layers(m):
+                per_layer[ell].append((_STAGE_OF[m.name], m))
+        for ell, ops in enumerate(per_layer):
+            home = layer_stacks[ell] if layer_stacks is not None else None
+            chans = self._stack_channels(home)
+            by_stage: Dict[int, List[DecodeMatmul]] = {}
+            for lvl, m in ops:
+                by_stage.setdefault(lvl, []).append(m)
+            for lvl in sorted(by_stage):
+                group = by_stage[lvl]
+                # serial waves when a level is wider than the stack
+                for w0 in range(0, len(group), len(chans)):
+                    wave = group[w0:w0 + len(chans)]
+                    split = _group_split(
+                        tuple((m.out_dim, m.in_dim) for m in wave),
+                        len(chans), self.placement, self._split_batch)
+                    stage, c0 = [], 0
+                    for m, nch in zip(wave, split):
+                        sub = chans[c0:c0 + nch]
+                        c0 += nch
+                        h = self.rt.place(self._draw_weight(rng, m),
+                                          placement=self.placement,
+                                          channels=sub)
+                        fam_handles[m.name].append((home, h))
+                        stage.append(_AsyncOp(m.name, m.out_dim, m.in_dim,
+                                              h, sub))
+                    self._stages.append(stage)
+        assert lm_head is not None
+        home = layer_stacks[-1] if layer_stacks is not None else None
+        chans = self._stack_channels(home)
+        h = self.rt.place(self._draw_weight(rng, lm_head),
+                          placement=self.placement, channels=chans)
+        fam_handles[lm_head.name].append((home, h))
+        self._stages.append([_AsyncOp(lm_head.name, lm_head.out_dim,
+                                      lm_head.in_dim, h, chans)])
+        self.weights = [(m, fam_handles[m.name]) for m in self.matmuls]
 
     def _family_layers(self, m: DecodeMatmul) -> List[int]:
         """Decoder-layer index of each instance of one matmul family —
@@ -273,24 +510,26 @@ class DecodeOffload:
         return sum(m.weight_bytes for m in self.matmuls)
 
     def _activation(self, in_dim: int, batch: int) -> np.ndarray:
-        """The step's (in_dim, batch) activation block.
+        """The (in_dim, batch) activation block for this shape.
 
         Analytic mode re-uses one zeros buffer per shape (shapes are all
-        the gemm reads); numeric mode draws fresh seeded values so every
-        step exercises a different accumulation pattern — matmuls sharing
-        ``in_dim`` within a step share the block, like the decode hidden
-        state feeding every projection.
+        the gemm reads); numeric mode draws seeded values from a child
+        generator keyed by ``(seed, in_dim, batch)`` — deterministic
+        regardless of draw order, weight count, or step index, so
+        repeated offload runs in one process are reproducible and the
+        XLA reference per ``(weight, batch)`` can be cached.  Matmuls
+        sharing ``in_dim`` within a step share the block, like the
+        decode hidden state feeding every projection.
         """
         key = (in_dim, batch)
-        if not self.numeric:
-            x = self._act_cache.get(key)
-            if x is None:
-                x = self._act_cache[key] = np.zeros(key, F16)
-            return x
         x = self._act_cache.get(key)
         if x is None:
-            x = self._act_cache[key] = \
-                (self._rng.standard_normal(key) * 0.05).astype(F16)
+            if self.numeric:
+                rng = np.random.default_rng((self.seed, 7, in_dim, batch))
+                x = (rng.standard_normal(key) * 0.05).astype(F16)
+            else:
+                x = np.zeros(key, F16)
+            self._act_cache[key] = x
         return x
 
     @staticmethod
@@ -300,35 +539,102 @@ class DecodeOffload:
         return np.asarray(jnp.matmul(jnp.asarray(w, jnp.float32),
                                      jnp.asarray(x, jnp.float32)))
 
+    def _reference(self, h: DeviceTensor, x: np.ndarray,
+                   batch: int) -> np.ndarray:
+        """Cached XLA FP32 reference of ``h.values @ x``.
+
+        Activations are deterministic per ``(in_dim, batch)`` and
+        weights never change after placement, so one reference per
+        ``(weight, batch)`` key serves every step — the per-step
+        recompute used to burn the numeric steps' wall clock for no
+        information.  The key is content-addressed (weight bytes), so
+        offload instances over the same seeded weights — e.g. the
+        engine bench's tiled-vs-batched pair — share references too.
+        """
+        ck = self._ref_keys.get(h.uid)
+        if ck is None:
+            # shape is part of the content: offload modes chop the same
+            # seeded stream into different shapes, so byte-equal buffers
+            # of different geometry must not share references
+            ck = self._ref_keys[h.uid] = hashlib.sha1(
+                repr(h.shape).encode() + h.values.tobytes()).digest()
+        key = (ck, batch)
+        ref = _REF_CACHE.get(key)
+        if ref is None:
+            ref = _REF_CACHE[key] = self._xla_reference(h.values, x)
+        return ref
+
+    def _check_numeric(self, name: str, h: DeviceTensor, x: np.ndarray,
+                       y, batch: int) -> Tuple[float, float]:
+        """Cross-check one executed matmul against the XLA reference;
+        returns ``(err, logits_err)`` for the step maxima."""
+        ref = self._reference(h, x, batch)
+        err = float(np.max(np.abs(np.asarray(y, np.float32) - ref)))
+        assert err < self.atol, \
+            (name, err, "PIM numeric decode diverged from the XLA path "
+             "beyond FP16 accumulation tolerance")
+        logits_err = 0.0
+        if name == "lm_head":
+            logits_err = err
+            self.last_logits = np.asarray(y)
+        return err, logits_err
+
     def step(self, batch: int) -> StepRecord:
         """Account (and in numeric mode, execute) one decode step over
-        ``batch`` live slots."""
+        ``batch`` live slots.
+
+        In async mode the step is submitted as the op DAG (stages chain,
+        ops within a stage overlap on their channel groups) and
+        ``pim_cycles`` is the step's timeline makespan; serialized mode
+        sums per-op makespans as before.
+        """
         before = {d.channel_id: d.snapshot() for d in self.rt.stack}
         pim_cycles = 0.0
         flops = 0
         act_bytes = 0
         max_err = logits_err = 0.0
-        if self.numeric:
-            self._act_cache.clear()     # fresh activations each step
-        for m, handles in self.weights:
-            x = self._activation(m.in_dim, batch)
-            for home, h in handles:
-                y, rep = self.rt.gemm(h, x, placement=self.placement,
-                                      execute=self.numeric, stack=home)
-                pim_cycles += rep.makespan_cycles    # ops serialize per step
-                flops += rep.total_flops
-                if self.numeric:
-                    ref = self._xla_reference(h.values, x)
-                    err = float(np.max(np.abs(
-                        np.asarray(y, np.float32) - ref)))
-                    assert err < self.atol, \
-                        (m.name, err, "PIM numeric decode diverged from "
-                         "the XLA path beyond FP16 accumulation tolerance")
-                    max_err = max(max_err, err)
-                    if m.name == "lm_head":
-                        logits_err = max(logits_err, err)
-                        self.last_logits = np.asarray(y)
-            act_bytes += m.in_dim * batch * BYTES_PER_ELEM * m.count
+        if self.async_mode:
+            tl = self.rt.timeline
+            t0 = tl.now
+            prev = self._step_tail      # chain steps: sampling feeds back
+            for stage in self._stages:
+                handles = []
+                for op in stage:
+                    x = self._activation(op.in_dim, batch)
+                    fut = self.rt.gemm(op.handle, x,
+                                       placement=self.placement,
+                                       execute=self.numeric,
+                                       channels=op.channels, after=prev)
+                    flops += fut.report.total_flops
+                    if self.numeric:
+                        err, lerr = self._check_numeric(
+                            op.name, op.handle, x, fut.result, batch)
+                        max_err = max(max_err, err)
+                        logits_err = max(logits_err, lerr)
+                    # consumed: only spans/retire matter downstream —
+                    # don't let the op log pin every step's outputs
+                    # (lm_head logits included) for the loop's lifetime
+                    fut.result = None
+                    handles.append(fut)
+                prev = handles
+            self._step_tail = prev
+            pim_cycles = tl.now - t0
+            act_bytes = sum(m.in_dim * batch * BYTES_PER_ELEM * m.count
+                            for m in self.matmuls)
+        else:
+            for m, handles in self.weights:
+                x = self._activation(m.in_dim, batch)
+                for home, h in handles:
+                    y, rep = self.rt.gemm(h, x, placement=self.placement,
+                                          execute=self.numeric, stack=home)
+                    pim_cycles += rep.makespan_cycles   # ops serialize
+                    flops += rep.total_flops
+                    if self.numeric:
+                        err, lerr = self._check_numeric(
+                            m.name, h, x, y, batch)
+                        max_err = max(max_err, err)
+                        logits_err = max(logits_err, lerr)
+                act_bytes += m.in_dim * batch * BYTES_PER_ELEM * m.count
         h2d = sum(d.xfer.h2d_bytes - before[d.channel_id].h2d_bytes
                   for d in self.rt.stack)
         d2h = sum(d.xfer.d2h_bytes - before[d.channel_id].d2h_bytes
@@ -346,9 +652,100 @@ class DecodeOffload:
             host_bound=("compute" if host_compute_s > host_memory_s
                         else "memory"),
             numeric=self.numeric, numeric_max_err=max_err,
-            logits_max_err=logits_err)
+            logits_max_err=logits_err, overlapped=self.async_mode)
         self.steps.append(rec)
         return rec
+
+    def _visit_groups(self) -> List[List[List[_AsyncOp]]]:
+        """Group the step's stages into *visits*: maximal runs of
+        consecutive stages whose ops live on the same home stack (one
+        request's layer block, the pipeline's scheduling quantum)."""
+        visits: List[List[List[_AsyncOp]]] = []
+        cps = self.rt.stack.channels_per_stack if self.stacks > 1 \
+            else len(self.rt.stack)
+        last_stack = None
+        for stage in self._stages:
+            stk = stage[0].channels[0] // cps
+            if stk != last_stack:
+                visits.append([])
+                last_stack = stk
+            visits[-1].append(stage)
+        return visits
+
+    def pipeline(self, requests: int, steps: int,
+                 batch: int = 1) -> Dict:
+        """Wave-pipeline ``requests`` independent decode requests for
+        ``steps`` decode steps each (async mode, accounting-only).
+
+        Every request is its own dependency chain — its stages chain
+        through ``after=`` edges (a step's first projections wait on the
+        previous step's lm_head: host-side sampling feeds the next
+        token) — while *different* requests share nothing but the
+        resident weights, so with layer blocks homed on different stacks
+        (``stacks=N``) request r+1's layer-0 block runs while request r
+        is in layer 1: the cross-stack layer pipeline.  Submission is
+        earliest-ready-first across requests, which lets the monotonic
+        channel clocks realize the wave schedule.
+
+        Returns the pipeline report: timeline makespan, per-stack busy
+        cycles, and the op count.
+        """
+        if not self.async_mode:
+            raise ValueError("pipeline() requires async_mode=True")
+        if self.numeric:
+            raise ValueError(
+                "pipeline() is accounting-only; numeric mode cross-"
+                "checks per-step via step()")
+        tl = self.rt.timeline
+        t0 = tl.now
+        n0 = len(tl.ops)
+        # submission is *visit*-atomic: all of a request's consecutive
+        # stages on one home stack enter the clocks contiguously, so a
+        # stack serves one request's layer block at a time (FIFO by
+        # arrival) instead of round-robin-interleaving every queued
+        # request's stages — stage-granular submission on monotonic
+        # clocks locks the ring into a lockstep convoy that leaves the
+        # bottleneck stack idle every period
+        visits = self._visit_groups()
+        total = len(visits) * steps
+        tails: List[Optional[List[OpHandle]]] = [None] * requests
+        ready = [0.0] * requests
+        done = [0] * requests
+        while True:
+            live = [r for r in range(requests) if done[r] < total]
+            if not live:
+                break
+            r = min(live, key=lambda r: (ready[r], r))
+            for stage in visits[done[r] % len(visits)]:
+                handles = []
+                for op in stage:
+                    x = self._activation(op.in_dim, batch)
+                    handles.append(self.rt.gemm(
+                        op.handle, x, placement=self.placement,
+                        execute=False, channels=op.channels,
+                        after=tails[r]))
+                tails[r] = handles
+            ready[r] = max(h.retire for h in tails[r])
+            done[r] += 1
+        makespan = tl.now - t0
+        per_stack_busy: Dict[int, float] = {}
+        cps = self.rt.stack.channels_per_stack if self.stacks > 1 \
+            else len(self.rt.stack)
+        for h in tl.ops[n0:]:
+            for ch, (_, busy) in h.spans.items():
+                per_stack_busy[ch // cps] = \
+                    per_stack_busy.get(ch // cps, 0.0) + busy
+        return {
+            "requests": requests,
+            "steps": steps,
+            "batch": batch,
+            "stacks": self.stacks,
+            "makespan_cycles": makespan,
+            "makespan_s": makespan / PIM_FREQ_HZ,
+            "ops": len(tl.ops) - n0,
+            "per_stack_busy_cycles": [per_stack_busy.get(s, 0.0)
+                                      for s in range(self.stacks)],
+        }
 
     # -- reporting -----------------------------------------------------------
 

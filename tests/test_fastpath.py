@@ -297,8 +297,14 @@ def test_decode_offload_numeric_rejects_large_configs():
 
 def test_decode_offload_numeric_detects_divergence():
     """The cross-check actually fires: corrupt a resident weight mirror
-    and the next numeric step must raise."""
+    and the next numeric step must raise.
+
+    The XLA reference is cached per (weight, batch) key — a repeat of
+    the same batch replays the pre-sabotage cache — so the divergence
+    must surface on the first *fresh* key: a step with a new batch.
+    """
     from repro.configs import get
+    from repro.serve import offload as offload_mod
     from repro.serve.offload import DecodeOffload
 
     cfg = get("qwen3-1.7b").reduced()
@@ -309,7 +315,12 @@ def test_decode_offload_numeric_detects_divergence():
         # sabotage the XLA reference, not the shared mirror
         DecodeOffload._xla_reference = staticmethod(
             lambda w, x: ref(w, x) + 1.0)
+        off.step(2)                  # same batch: cached refs still match
         with pytest.raises(AssertionError):
-            off.step(2)
+            off.step(3)              # fresh (weight, batch) key recomputes
     finally:
         DecodeOffload._xla_reference = staticmethod(ref)
+        # the failing step cached sabotaged references under the real
+        # content keys before its assert fired — evict them so later
+        # numeric offloads over the same seeded weights stay clean
+        offload_mod._REF_CACHE.clear()

@@ -19,9 +19,12 @@ trajectory of the harness itself is tracked across PRs (CI's
   PYTHONPATH=src python -m benchmarks.run engine     # fast-path gates
   PYTHONPATH=src python -m benchmarks.run cluster    # multi-stack scaling
   PYTHONPATH=src python -m benchmarks.run decode     # async decode overlap
+  PYTHONPATH=src python -m benchmarks.run obs        # observability gates
+  PYTHONPATH=src python -m benchmarks.run obs --out /tmp/bench.json
 """
 from __future__ import annotations
 
+import argparse
 import json
 import sys
 import time
@@ -74,26 +77,30 @@ def roofline_summary():
         return [("roofline/error", 0.0, str(e)[:120])]
 
 
-def write_bench_runtime(section_s: dict) -> None:
+def write_bench_runtime(section_s: dict, out: Path = None) -> None:
     """Update the BENCH_runtime.json artifact: harness wall-clock per
     section + the engine section's fast-path measurements (if it ran).
 
     Merges into the existing file so a partial run (e.g. ``run fig8``)
     refreshes only its own sections and never wipes the engine metrics
-    the artifact exists to track across PRs.
+    the artifact exists to track across PRs.  ``out`` redirects the
+    artifact (``--out``) — e.g. CI's bench-trend step writes a fresh
+    JSON next to the committed baseline and diffs the two.
     """
     from benchmarks.paper_figures import LAST_CLUSTER_METRICS, \
-        LAST_DECODE_METRICS, LAST_ENGINE_METRICS
-    BENCH_RUNTIME.parent.mkdir(parents=True, exist_ok=True)
+        LAST_DECODE_METRICS, LAST_ENGINE_METRICS, LAST_OBS_METRICS
+    out = Path(out) if out is not None else BENCH_RUNTIME
+    out.parent.mkdir(parents=True, exist_ok=True)
     rec = {"generated_by": "benchmarks.run", "section_wall_s": {},
-           "engine": {}, "cluster": {}, "decode": {}}
-    if BENCH_RUNTIME.exists():
+           "engine": {}, "cluster": {}, "decode": {}, "obs": {}}
+    if out.exists():
         try:
-            prev = json.load(open(BENCH_RUNTIME))
+            prev = json.load(open(out))
             rec["section_wall_s"] = prev.get("section_wall_s", {})
             rec["engine"] = prev.get("engine", {})
             rec["cluster"] = prev.get("cluster", {})
             rec["decode"] = prev.get("decode", {})
+            rec["obs"] = prev.get("obs", {})
         except (OSError, ValueError):
             pass
     rec["section_wall_s"].update(
@@ -106,7 +113,9 @@ def write_bench_runtime(section_s: dict) -> None:
                            for k, v in LAST_CLUSTER_METRICS.items()})
     rec["decode"].update({k: round(v, 6)
                           for k, v in LAST_DECODE_METRICS.items()})
-    with open(BENCH_RUNTIME, "w") as f:
+    rec["obs"].update({k: round(v, 6)
+                       for k, v in LAST_OBS_METRICS.items()})
+    with open(out, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
         f.write("\n")
 
@@ -117,7 +126,18 @@ def main() -> None:
     sections["kernels"] = kernel_microbench
     sections["roofline"] = roofline_summary
 
-    wanted = sys.argv[1:] or list(sections)
+    ap = argparse.ArgumentParser(
+        description="benchmark driver; no sections = run everything")
+    ap.add_argument("sections", nargs="*", metavar="SECTION",
+                    help=f"sections to run (default: all of "
+                         f"{sorted(sections)})")
+    ap.add_argument("--out", metavar="PATH", default=None,
+                    help="write the BENCH JSON artifact here instead of "
+                         "results/BENCH_runtime.json (a fresh path skips "
+                         "the merge with the committed baseline)")
+    args = ap.parse_args()
+
+    wanted = args.sections or list(sections)
     unknown = [k for k in wanted if k not in sections]
     if unknown:
         print(f"unknown section(s) {unknown}; available: {sorted(sections)}",
@@ -135,7 +155,7 @@ def main() -> None:
             failures += 1
             print(f"{key}/FAILED,0,{e}")
         section_s[key] = time.perf_counter() - t0
-    write_bench_runtime(section_s)
+    write_bench_runtime(section_s, out=args.out)
     if failures:
         sys.exit(1)
 

@@ -8,6 +8,10 @@
 3. Scale the same op across HBM pseudo-channels (the paper's future work)
    and dump an HBM-PIMulator-compatible command trace.
 
+To *watch* a multi-channel schedule instead of just measuring it, export
+a Perfetto-loadable profile and the critical-path attribution — see
+docs/observability.md and ``examples/serve_lm.py --profile out.json``.
+
   PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np

@@ -12,9 +12,16 @@ set on the per-channel engines (weights materialized and resident) and
 cross-checks every output — lm_head logits included — against an XLA
 reference within FP16 accumulation tolerance.
 
+With ``--profile out.json`` the offload runtime runs in async timeline
+mode and the run additionally writes a Chrome-trace profile of the PIM
+schedule (open at https://ui.perfetto.dev), prints the critical-path
+attribution of the PIM makespan, and reports per-request TTFT/TPOT
+percentiles from the serve loop's metrics — see docs/observability.md.
+
   PYTHONPATH=src python examples/serve_lm.py [--requests 12] [--slots 4]
   PYTHONPATH=src python examples/serve_lm.py --pim-offload
   PYTHONPATH=src python examples/serve_lm.py --pim-offload --pim-numeric
+  PYTHONPATH=src python examples/serve_lm.py --profile pim_profile.json
 """
 import argparse
 import time
@@ -40,16 +47,27 @@ def main():
     ap.add_argument("--pim-numeric", action="store_true",
                     help="run the offloaded matmuls numerically on the "
                          "per-channel engines, cross-checked against XLA")
+    ap.add_argument("--profile", metavar="OUT_JSON", default=None,
+                    help="write a Chrome-trace profile of the PIM decode "
+                         "schedule here (implies --pim-offload in async "
+                         "timeline mode) and report critical-path + "
+                         "TTFT/TPOT latency metrics")
     args = ap.parse_args()
 
     cfg = get("qwen3-1.7b").reduced().replace(n_layers=4, d_model=256,
                                               d_ff=512, vocab_size=1024)
     params = lm.init(cfg, jax.random.PRNGKey(0))
+    metrics = None
+    if args.profile:
+        from repro.obs import MetricsRegistry
+        metrics = MetricsRegistry()
     offload = DecodeOffload(cfg, channels=args.pim_channels,
-                            numeric=args.pim_numeric) \
-        if args.pim_offload or args.pim_numeric else None
+                            numeric=args.pim_numeric,
+                            async_mode=args.profile is not None,
+                            metrics=metrics) \
+        if args.pim_offload or args.pim_numeric or args.profile else None
     srv = Server(cfg, params, slots=args.slots, cache_len=160,
-                 pim_offload=offload)
+                 pim_offload=offload, metrics=metrics)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -89,6 +107,19 @@ def main():
               f"({roof['steady_host_bound']}-bound host), "
               f"pim_vs_host={roof['steady_pim_vs_host']:.3f}")
         assert roof["steady_reuse_bytes"] == offload.weight_bytes
+    if args.profile:
+        from repro.obs import export_chrome_trace, profile_report
+        trace = export_chrome_trace(offload.rt, args.profile)
+        rep = profile_report(offload.rt)
+        print(f"profile: {len(trace['traceEvents'])} events -> "
+              f"{args.profile} (open at https://ui.perfetto.dev)")
+        print(rep.summary(top_k=5))
+        lat_sum = srv.latency_summary()
+        ttft, tpot = lat_sum["ttft_s"], lat_sum["tpot_s"]
+        print(f"serve latency [{lat_sum['requests']} requests, "
+              f"{lat_sum['tokens']} tokens]: "
+              f"ttft p50={ttft['p50']:.3f}s p99={ttft['p99']:.3f}s | "
+              f"tpot p50={tpot['p50']:.4f}s p99={tpot['p99']:.4f}s")
     print("serve_lm OK")
 
 

@@ -77,6 +77,11 @@ class HostLinkLedger:
     # it; serialized mode keeps link time on its own axis instead
     # (RuntimeReport.cluster_makespan_cycles).
     tl_free: float = 0.0
+    # repro.obs metrics registry (attached via PIMRuntime(metrics=));
+    # excluded from ==/repr so instrumented ledgers stay equal to bare
+    # ones — the profiling-off byte-identity invariant
+    metrics: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def charge(self, kind: str, nbytes: int) -> int:
         assert kind in ("xstack", "drain"), kind
@@ -84,6 +89,13 @@ class HostLinkLedger:
         self.bytes += nbytes
         self.cycles += cyc
         self.events.append((kind, nbytes))
+        if self.metrics is not None:
+            self.metrics.counter(
+                f"link.{kind}_bytes", unit="bytes",
+                help=f"host-link bytes charged as {kind!r}").inc(nbytes)
+            self.metrics.counter(
+                "link.cycles", unit="cycles",
+                help="host-link occupancy charged").inc(cyc)
         return cyc
 
 

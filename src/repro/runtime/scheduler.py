@@ -270,6 +270,17 @@ class RuntimeReport:
         if self.stacks > 1:           # single-stack summaries are unchanged
             line += (f" stacks={self.stacks} "
                      f"link_bytes={self.host_link_bytes}")
+            # the cluster dimension, self-describing: how serialized the
+            # shared link is against the channel makespan, and where the
+            # residency machinery moved (or refused to move) bytes
+            cmk = self.cluster_makespan_cycles
+            link_util = self.host_link_cycles / cmk if cmk else 0.0
+            line += (f"\n  cluster: makespan={cmk:.0f}cyc "
+                     f"link_cycles={self.host_link_cycles} "
+                     f"link_util={link_util:.2f} "
+                     f"reuse={self.total_reuse_bytes} "
+                     f"dedupe={self.total_dedupe_bytes} "
+                     f"spill={self.total_spill_bytes}")
         return line
 
 
@@ -319,7 +330,8 @@ class PIMRuntime:
                  engine: str = "batched", stacks: int = 1,
                  overlap: bool = True,
                  capacity_bytes: Optional[int] = None,
-                 async_mode: bool = False):
+                 async_mode: bool = False,
+                 metrics=None, profile=None):
         assert engine in ENGINE_MODES, engine
         if stack is not None:
             if stacks != 1 or capacity_bytes is not None:
@@ -343,6 +355,18 @@ class PIMRuntime:
         # dep inference: tensor uid -> the OpHandle that last wrote it
         # (place uploads and keep_output results); readers wait on it
         self._writers: Dict[int, OpHandle] = {}
+        # -- observability (repro.obs), strictly additive: both hooks
+        # only *read* finished reports/ledgers, so traces, ledgers and
+        # numerics are untouched when either is attached, and nothing
+        # below runs at all when both stay None (the default)
+        self.metrics = metrics
+        if metrics is not None and self._cluster is not None:
+            self._cluster.link.metrics = metrics
+        self.profile = None
+        if profile:
+            from repro.obs.profile import Profiler
+            prof = Profiler() if profile is True else profile
+            self.profile = prof.attach(self)
 
     # -- internals -----------------------------------------------------------
 
@@ -434,6 +458,36 @@ class PIMRuntime:
         if stack is None or self._cluster is None:
             return list(self.stack)
         return self._cluster.stacks[stack].devices
+
+    def _note_op(self, report: RuntimeReport) -> None:
+        """Fold one finished op's report into the metrics registry."""
+        m = self.metrics
+        m.counter("runtime.ops", unit="ops",
+                  help="ops scheduled (gemm/gemv/elementwise)").inc()
+        m.counter("runtime.flops", unit="flop",
+                  help="FLOPs executed across channels").inc(
+            report.total_flops)
+        m.counter("runtime.commands", unit="commands",
+                  help="PIM column commands issued").inc(
+            report.total_commands)
+        m.counter("runtime.h2d_bytes", unit="bytes",
+                  help="host->PIM bytes actually transferred").inc(
+            report.total_h2d_bytes)
+        m.counter("runtime.d2h_bytes", unit="bytes",
+                  help="PIM->host bytes actually transferred").inc(
+            report.total_d2h_bytes)
+        m.counter("runtime.reuse_bytes", unit="bytes",
+                  help="h2d avoided by cross-op residency").inc(
+            report.total_reuse_bytes)
+        m.counter("runtime.dedupe_bytes", unit="bytes",
+                  help="h2d avoided by within-op slice dedupe").inc(
+            report.total_dedupe_bytes)
+        m.counter("runtime.spill_bytes", unit="bytes",
+                  help="residency evicted under capacity bounds").inc(
+            report.total_spill_bytes)
+        m.histogram("runtime.op_makespan_cycles", unit="cycles",
+                    help="per-op cluster makespan distribution").record(
+            report.cluster_makespan_cycles)
 
     def _submit_async(self, name: str, busy: Dict[int, float],
                       link_cycles: int, marks: Dict[int, int],
@@ -595,6 +649,9 @@ class PIMRuntime:
         op_devs = self._op_devices(stack, channels)
         marks = {d.channel_id: len(d.events) for d in op_devs}
         before_h2d = {d.channel_id: d.xfer.h2d_cycles for d in op_devs}
+        before_h2d_bytes = {d.channel_id: d.xfer.h2d_bytes
+                            for d in op_devs} \
+            if self.metrics is not None else None
         link_before = self._link_before()
         link_seen: Dict = {}
         for s, box in boxes:
@@ -606,6 +663,15 @@ class PIMRuntime:
                 self._link_charge_ship((role, handle.uid, box), s.stack,
                                        box_bytes(box), link_seen)
             handle.mark_resident(flat, box)
+        if self.metrics is not None:
+            self.metrics.counter(
+                "runtime.place_ops", unit="ops",
+                help="operand placements (weight uploads)").inc()
+            self.metrics.counter(
+                "runtime.upload_bytes", unit="bytes",
+                help="one-time h2d charged by place()").inc(
+                sum(d.xfer.h2d_bytes - before_h2d_bytes[d.channel_id]
+                    for d in op_devs))
         if self.timeline is not None:
             busy = {d.channel_id:
                     float(d.xfer.h2d_cycles - before_h2d[d.channel_id])
@@ -615,6 +681,13 @@ class PIMRuntime:
                 self._link_before()[1] - link_before[1], marks,
                 reads=(), writes=(handle.uid,), after=None,
                 report=None, result=handle)
+        elif self.profile is not None:
+            self.profile.on_op(
+                "place",
+                {d.channel_id:
+                 float(d.xfer.h2d_cycles - before_h2d[d.channel_id])
+                 for d in op_devs},
+                self._link_before()[1] - link_before[1])
         return handle
 
     # -- GEMM / GEMV ---------------------------------------------------------
@@ -748,6 +821,8 @@ class PIMRuntime:
         report = self._finish("gemm", (m, k, n), placement, before,
                               lead_in, link_before=link_before,
                               devices=op_devs)
+        if self.metrics is not None:
+            self._note_op(report)
         result = out_handle if keep_output \
             else (jnp.asarray(out) if execute else None)
         if self.timeline is not None:
@@ -758,6 +833,11 @@ class PIMRuntime:
                 reads=[h.uid for h in (ah, bh) if h is not None],
                 writes=(out_handle.uid,) if keep_output else (),
                 after=after, report=report, result=result)
+        if self.profile is not None:
+            self.profile.on_op(
+                "gemm",
+                {c.channel: c.busy_cycles for c in report.per_channel},
+                report.host_link_cycles, report=report)
         return result, report
 
     def gemv(self, a: Operand, x: jnp.ndarray, *,
@@ -789,6 +869,8 @@ class PIMRuntime:
             return res
         y, rep = res
         rep = dataclasses.replace(rep, op="gemv")
+        if self.profile is not None:
+            self.profile.amend_last("gemv", rep)
         return (y[:, 0] if y is not None else None), rep
 
     # -- element-wise --------------------------------------------------------
@@ -879,6 +961,8 @@ class PIMRuntime:
         report = self._finish(f"ew-{kind}", (m, c), placement, before,
                               lead_in, link_before=link_before,
                               devices=op_devs)
+        if self.metrics is not None:
+            self._note_op(report)
         result = out_handle if keep_output \
             else (jnp.asarray(out) if execute else None)
         if self.timeline is not None:
@@ -889,6 +973,11 @@ class PIMRuntime:
                 reads=[h.uid for h in (ah, bh) if h is not None],
                 writes=(out_handle.uid,) if keep_output else (),
                 after=after, report=report, result=result)
+        if self.profile is not None:
+            self.profile.on_op(
+                f"ew-{kind}",
+                {cr.channel: cr.busy_cycles for cr in report.per_channel},
+                report.host_link_cycles, report=report)
         return result, report
 
 

@@ -154,11 +154,21 @@ class Timeline:
         ends = [s + b for s, b in spans.values()]
         if link_window is not None:
             ends.append(link_window[1])
+        start = min((s for s, _ in spans.values()), default=ready)
+        retire = max(ends, default=ready)
+        if not spans and link_window is None:
+            # degenerate op: all-zero channel_busy and no link traffic
+            # (e.g. a place() whose shards were all already resident).
+            # Normalize to a zero-length marker at its ready time —
+            # empty spans with start == retire == ready — so downstream
+            # interval consumers (critical-path walks, utilization
+            # denominators) never see an undefined or inverted interval.
+            assert start == retire == ready, (start, retire, ready)
+        assert retire >= start, (name, start, retire)
         handle = OpHandle(
             op_id=self._next_id, name=name,
             deps=tuple(d.op_id for d in deps),
-            start=min((s for s, _ in spans.values()), default=ready),
-            retire=max(ends, default=ready),
+            start=start, retire=retire,
             spans=spans, link_window=link_window,
             report=report, result=result)
         self._next_id += 1

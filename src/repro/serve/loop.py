@@ -28,6 +28,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as lm
+from repro.obs.metrics import Histogram
 from repro.serve.offload import DecodeOffload
 
 
@@ -39,19 +40,25 @@ class Request:
     out_tokens: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     submitted_at: float = 0.0
+    first_token_at: float = 0.0     # prefill produced the first token
     finished_at: float = 0.0
 
 
 class Server:
     def __init__(self, cfg: ArchConfig, params, slots: int = 4,
                  cache_len: int = 128, eos_id: Optional[int] = None,
-                 pim_offload: Optional[DecodeOffload] = None):
+                 pim_offload: Optional[DecodeOffload] = None,
+                 metrics=None):
         self.cfg = cfg
         self.params = params
         self.slots = slots
         self.cache_len = cache_len
         self.eos_id = eos_id
         self.pim_offload = pim_offload
+        # repro.obs registry for serve.* latency metrics (TTFT/TPOT per
+        # request, step wall time); pass the same registry to the
+        # offload sidecar to merge runtime streams into one snapshot
+        self.metrics = metrics
         self.active: List[Optional[Request]] = [None] * slots
         self.pos = np.zeros((slots,), np.int32)
         self.caches = lm.make_caches(cfg, slots, cache_len)
@@ -82,6 +89,15 @@ class Server:
                     self.caches, fresh)
                 tok = int(jnp.argmax(logits[0]))
                 req.out_tokens.append(tok)
+                # the prefill's argmax IS the request's first token:
+                # TTFT closes here, before any decode step runs
+                req.first_token_at = time.time()
+                if self.metrics is not None:
+                    self.metrics.histogram(
+                        "serve.ttft_s", unit="s",
+                        help="time to first token (submit -> prefill "
+                             "argmax)").record(
+                        req.first_token_at - req.submitted_at)
                 self.active[i] = req
                 self.pos[i] = len(req.prompt)
 
@@ -91,9 +107,23 @@ class Server:
         req.finished_at = time.time()
         self.completed.append(req)
         self.active[i] = None
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("serve.requests", unit="requests",
+                      help="requests completed").inc()
+            m.counter("serve.tokens", unit="tokens",
+                      help="tokens generated (first token included)").inc(
+                len(req.out_tokens))
+            if len(req.out_tokens) >= 2:      # TPOT needs a decode tail
+                m.histogram(
+                    "serve.tpot_s", unit="s",
+                    help="time per output token after the first").record(
+                    (req.finished_at - req.first_token_at)
+                    / (len(req.out_tokens) - 1))
 
     def step(self):
         """One serving iteration: admit, batched decode, retire."""
+        t0 = time.time() if self.metrics is not None else 0.0
         self._admit()
         live = [i for i in range(self.slots) if self.active[i] is not None]
         if not live:
@@ -115,6 +145,14 @@ class Server:
             if (len(req.out_tokens) >= req.max_new or hit_eos
                     or int(self.pos[i]) >= self.cache_len - 1):
                 self._retire(i)
+        if self.metrics is not None:
+            self.metrics.histogram(
+                "serve.step_s", unit="s",
+                help="serving-iteration wall time").record(
+                time.time() - t0)
+            self.metrics.gauge(
+                "serve.live_slots", unit="slots",
+                help="slots decoding in the last iteration").set(len(live))
         return True
 
     def run_until_drained(self, max_iters: int = 10_000):
@@ -124,6 +162,29 @@ class Server:
             self.step()
             it += 1
         return self.completed
+
+    def latency_summary(self) -> Dict:
+        """TTFT/TPOT percentile summary over completed requests.
+
+        Computed from the request timestamps directly, so it works with
+        or without an attached metrics registry.  TTFT is submit ->
+        prefill argmax; TPOT divides the decode tail by the tokens after
+        the first (requests with a single token report no TPOT sample).
+        """
+        ttft = Histogram("serve.ttft_s", unit="s")
+        tpot = Histogram("serve.tpot_s", unit="s")
+        for req in self.completed:
+            if req.first_token_at:
+                ttft.record(req.first_token_at - req.submitted_at)
+                if req.finished_at and len(req.out_tokens) >= 2:
+                    tpot.record((req.finished_at - req.first_token_at)
+                                / (len(req.out_tokens) - 1))
+        return {
+            "requests": len(self.completed),
+            "tokens": sum(len(r.out_tokens) for r in self.completed),
+            "ttft_s": ttft.summary(),
+            "tpot_s": tpot.summary(),
+        }
 
 
 def _splice(full, one, slot: int, cfg: ArchConfig):

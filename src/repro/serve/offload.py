@@ -354,7 +354,7 @@ class DecodeOffload:
                  placement: str = "balanced", numeric: bool = False,
                  seed: int = 0, atol: float = NUMERIC_ATOL,
                  engine: str = "batched", async_mode: bool = False,
-                 split_batch: int = 1):
+                 split_batch: int = 1, metrics=None):
         self.cfg = cfg
         self.placement = placement
         self.numeric = numeric
@@ -362,12 +362,17 @@ class DecodeOffload:
         self.stacks = stacks
         self.seed = seed
         self.async_mode = async_mode
+        # repro.obs registry shared down into the runtime (per-op and
+        # host-link streams land in the same registry as the per-step
+        # offload.* metrics below); None = zero observability overhead
+        self.metrics = metrics
         # the decode batch the async channel-group splits are tuned for
         # (splits are fixed at weight-placement time — weights live on
         # their groups — so pick the serving regime here, not per step)
         self._split_batch = split_batch
         self.rt = PIMRuntime(channels=channels, stacks=stacks,
-                             engine=engine, async_mode=async_mode)
+                             engine=engine, async_mode=async_mode,
+                             metrics=metrics)
         self.matmuls = decode_matmuls(cfg)
         if numeric and self.weight_bytes > NUMERIC_MAX_WEIGHT_BYTES:
             raise ValueError(
@@ -654,6 +659,18 @@ class DecodeOffload:
             numeric=self.numeric, numeric_max_err=max_err,
             logits_max_err=logits_err, overlapped=self.async_mode)
         self.steps.append(rec)
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("offload.steps", unit="steps",
+                      help="decode steps mirrored onto PIM").inc()
+            m.counter("offload.flops", unit="flop",
+                      help="decode FLOPs offloaded").inc(rec.flops)
+            m.counter("offload.act_h2d_bytes", unit="bytes",
+                      help="per-step activation h2d traffic").inc(rec.h2d_bytes)
+            m.histogram("offload.step_pim_cycles", unit="cycles",
+                        help="per-step PIM makespan (async: timeline "
+                             "makespan; serialized: sum of ops)").record(
+                rec.pim_cycles)
         return rec
 
     def _visit_groups(self) -> List[List[List[_AsyncOp]]]:

@@ -1,0 +1,512 @@
+"""Observability layer invariants (repro.obs).
+
+* metrics primitives: counters monotonic, exact histogram percentiles,
+  registry get-or-create with type safety;
+* Chrome-trace export: valid Trace Event JSON, one track per busy
+  (stack, channel) plus a host-link track, matched dep-flow pairs,
+  µs <-> cycle unit round-trip;
+* critical path: segments partition [0, makespan] exactly — chained,
+  independent, slack-gapped and degenerate op logs;
+* the serialized shadow profiler reproduces barrier semantics (shadow
+  clock == sum of per-op cluster makespans) and feeds the same
+  export/analysis pipeline;
+* profiling strictly additive: with metrics/profile off and on, ledgers
+  are ==-equal and traces byte-identical;
+* end to end: an async DecodeOffload step exports + attributes, the
+  Server reports TTFT/TPOT percentiles;
+* satellites: degenerate Timeline.submit normalization, and one trace
+  carrying # RESIDENT + # STACK/# HOSTLINK + # SPILL + # TSTART/# TEND
+  simultaneously round-trips through parse_trace / strip_timestamps.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.obs import (
+    Counter,
+    Gauge,
+    Histogram,
+    MetricsRegistry,
+    Profiler,
+    US_PER_CYCLE,
+    chrome_trace,
+    critical_path,
+    export_chrome_trace,
+    profile_report,
+)
+from repro.runtime import PIMRuntime, emit_trace, parse_trace, \
+    strip_timestamps
+from repro.runtime.timeline import OpHandle
+
+rng = np.random.default_rng(7)
+
+
+def rand(*shape):
+    return (rng.standard_normal(shape) * 0.1).astype(np.float16)
+
+
+A = rand(256, 128)
+B = rand(128, 64)
+X = rand(128)
+
+
+# ---------------------------------------------------------------------------
+# metrics primitives
+# ---------------------------------------------------------------------------
+
+
+def test_counter_monotonic():
+    c = Counter("t.bytes", unit="bytes")
+    c.inc(), c.inc(41)
+    assert c.value == 42
+    with pytest.raises(AssertionError):
+        c.inc(-1)
+
+
+def test_gauge_set_inc_dec():
+    g = Gauge("t.slots", unit="slots")
+    g.set(4), g.inc(), g.dec(2)
+    assert g.value == 3.0
+
+
+def test_histogram_exact_percentiles():
+    h = Histogram("t.lat", unit="s")
+    for v in range(1, 101):          # 1..100
+        h.record(v)
+    assert h.count == 100 and h.mean == pytest.approx(50.5)
+    assert h.percentile(0) == 1 and h.percentile(100) == 100
+    assert h.percentile(50) == pytest.approx(50.5)   # interpolated
+    s = h.summary()
+    assert s["p99"] == pytest.approx(99.01)
+    assert s["min"] == 1 and s["max"] == 100
+
+
+def test_histogram_empty_summary_is_zeroes():
+    s = Histogram("t.empty").summary()
+    assert s == {"count": 0, "mean": 0.0, "min": 0.0, "max": 0.0,
+                 "p50": 0.0, "p90": 0.0, "p99": 0.0}
+
+
+def test_registry_get_or_create_and_type_safety():
+    m = MetricsRegistry()
+    c1 = m.counter("a.b", unit="bytes", help="first wins")
+    c2 = m.counter("a.b", unit="ignored")
+    assert c1 is c2 and c1.unit == "bytes"
+    with pytest.raises(TypeError):
+        m.gauge("a.b")
+    m.histogram("a.h").record(1.0)
+    assert "a.b" in m and len(m) == 2
+    snap = m.snapshot()
+    assert snap["a.b"]["type"] == "counter"
+    assert snap["a.h"]["p50"] == 1.0
+    assert {r["name"] for r in m.catalog()} == {"a.b", "a.h"}
+    json.dumps(snap)                  # JSON-ready
+
+
+# ---------------------------------------------------------------------------
+# critical path on hand-built op logs
+# ---------------------------------------------------------------------------
+
+
+def _op(op_id, name, spans, deps=(), link=None):
+    ends = [s + b for s, b in spans.values()]
+    if link:
+        ends.append(link[1])
+    start = min((s for s, _ in spans.values()),
+                default=link[0] if link else 0.0)
+    return OpHandle(op_id=op_id, name=name, deps=tuple(deps), start=start,
+                    retire=max(ends, default=start), spans=dict(spans),
+                    link_window=link)
+
+
+def test_critical_path_chain_sums_exactly():
+    ops = [_op(1, "a", {0: (0.0, 100.0)}),
+           _op(2, "b", {0: (100.0, 50.0)}, deps=(1,))]
+    rep = critical_path(ops)
+    assert rep.makespan_cycles == 150.0
+    assert rep.coverage_cycles == rep.makespan_cycles
+    assert rep.by_op == {1: 100.0, 2: 50.0} and rep.slack_cycles == 0.0
+    assert [s.op_id for s in rep.segments] == [1, 2]   # chronological
+
+
+def test_critical_path_independent_ops_attribute_longest():
+    ops = [_op(1, "short", {0: (0.0, 40.0)}),
+           _op(2, "long", {1: (0.0, 100.0)})]
+    rep = critical_path(ops)
+    assert rep.coverage_cycles == rep.makespan_cycles == 100.0
+    assert rep.by_op == {2: 100.0}        # the short op is off-path
+    assert rep.channel_busy == {0: 40.0, 1: 100.0}
+
+
+def test_critical_path_slack_fills_gaps():
+    # op 2 starts 30 cycles after op 1 ends, bound by nothing we model
+    ops = [_op(1, "a", {0: (0.0, 50.0)}),
+           _op(2, "b", {1: (80.0, 20.0)})]
+    rep = critical_path(ops)
+    assert rep.coverage_cycles == rep.makespan_cycles == 100.0
+    assert rep.slack_cycles == 30.0
+    kinds = [s.kind for s in rep.segments]
+    assert kinds == ["channel", "slack", "channel"]
+
+
+def test_critical_path_link_bound():
+    ops = [_op(1, "xfer", {0: (0.0, 10.0)}, link=(0.0, 60.0)),
+           _op(2, "use", {1: (60.0, 40.0)}, deps=(1,))]
+    rep = critical_path(ops)
+    assert rep.coverage_cycles == rep.makespan_cycles == 100.0
+    assert rep.link_cycles == 60.0 and rep.by_op[1] == 60.0
+
+
+def test_critical_path_hops_through_degenerate_ops():
+    noop = OpHandle(op_id=2, name="noop", deps=(1,), start=50.0,
+                    retire=50.0, spans={})
+    ops = [_op(1, "a", {0: (0.0, 50.0)}), noop,
+           _op(3, "b", {0: (50.0, 25.0)}, deps=(2,))]
+    rep = critical_path(ops)
+    assert rep.coverage_cycles == rep.makespan_cycles == 75.0
+    assert rep.by_op == {1: 50.0, 3: 25.0}     # noop contributes 0
+
+
+def test_critical_path_empty_log():
+    rep = critical_path([])
+    assert rep.makespan_cycles == 0.0 and rep.segments == []
+
+
+def test_profile_report_json_round_trip(tmp_path):
+    ops = [_op(1, "a", {0: (0.0, 100.0)}),
+           _op(2, "b", {0: (100.0, 50.0)}, deps=(1,))]
+    rep = critical_path(ops)
+    p = tmp_path / "rep.json"
+    rep.dump(str(p))
+    data = json.load(open(p))
+    assert data["profile_report"] == 1
+    assert data["coverage_cycles"] == data["makespan_cycles"] == 150.0
+    assert "top" not in data and data["by_op"] == {"1": 100.0, "2": 50.0}
+    assert "makespan=150" in rep.summary()
+
+
+# ---------------------------------------------------------------------------
+# Chrome-trace export
+# ---------------------------------------------------------------------------
+
+
+def _async_cluster_rt():
+    rt = PIMRuntime(channels=2, stacks=2, async_mode=True)
+    a, b = rand(256, 128), rand(128, 128)
+    h1 = rt.gemm(a, b, placement="2d-block")      # crosses the link
+    rt.gemm(a, b, placement="2d-block", after=[h1])
+    return rt
+
+
+def test_chrome_trace_structure_and_units():
+    rt = _async_cluster_rt()
+    trace = chrome_trace(rt)
+    json.loads(json.dumps(trace))                 # valid JSON
+    events = trace["traceEvents"]
+    assert trace["otherData"]["makespan_cycles"] == rt.timeline.now
+    # one op track per busy (stack, channel); flat ids recoverable
+    ops = [e for e in events if e.get("ph") == "X" and e["cat"] == "op"]
+    busy = {ch for h in rt.timeline.ops for ch in h.spans}
+    assert {(e["pid"], e["tid"]) for e in ops} == \
+        {(ch // 2, ch % 2) for ch in busy}
+    # host-link track named and carrying the link windows
+    names = {e["args"]["name"] for e in events
+             if e.get("ph") == "M" and e.get("name") == "process_name"}
+    assert names == {"stack 0", "stack 1", "host-link"}
+    links = [e for e in events if e.get("ph") == "X" and e["cat"] == "link"]
+    assert links and all(e["pid"] == 2 for e in links)
+    # µs timestamps are cycles / 250
+    for e in ops:
+        assert e["ts"] == pytest.approx(
+            e["args"]["start_cycles"] * US_PER_CYCLE)
+        assert e["dur"] == pytest.approx(
+            e["args"]["busy_cycles"] * US_PER_CYCLE)
+
+
+def test_chrome_trace_flow_pairs_match_dep_edges():
+    rt = _async_cluster_rt()
+    events = chrome_trace(rt)["traceEvents"]
+    s = sorted(e["id"] for e in events if e.get("ph") == "s")
+    f = sorted(e["id"] for e in events if e.get("ph") == "f")
+    n_edges = sum(len(h.deps) for h in rt.timeline.ops)
+    assert s == f and len(s) == n_edges > 0
+    assert all(e.get("bp") == "e" for e in events if e.get("ph") == "f")
+
+
+def test_export_writes_file(tmp_path):
+    rt = _async_cluster_rt()
+    p = tmp_path / "prof.json"
+    trace = export_chrome_trace(rt, str(p))
+    assert json.load(open(p)) == json.loads(json.dumps(trace))
+
+
+def test_phase_slices_cover_span():
+    rt = PIMRuntime(channels=2, async_mode=True)
+    rt.gemm(A, B, placement="balanced")
+    events = chrome_trace(rt)["traceEvents"]
+    ops = [e for e in events if e.get("ph") == "X" and e["cat"] == "op"]
+    phases = [e for e in events if e.get("ph") == "X" and e["cat"] == "phase"]
+    assert phases
+    for op in ops:
+        mine = [p for p in phases
+                if (p["pid"], p["tid"]) == (op["pid"], op["tid"])
+                and op["ts"] - 1e-9 <= p["ts"]
+                and p["ts"] + p["dur"] <= op["ts"] + op["dur"] + 1e-9]
+        assert mine, "every op slice nests its phase breakdown"
+
+
+# ---------------------------------------------------------------------------
+# serialized shadow profiler
+# ---------------------------------------------------------------------------
+
+
+def test_shadow_profiler_barrier_semantics():
+    rt = PIMRuntime(channels=4, profile=True)
+    w = rt.place(A, placement="balanced")
+    _, r1 = rt.gemv(w, X, placement="balanced")
+    _, r2 = rt.gemm(A, B, placement="balanced")
+    names = [h.name for h in rt.profile.ops]
+    assert names == ["place", "gemv", "gemm"]
+    # shadow clock == serialized accumulation; ops chain by dep edges
+    assert rt.profile.now == pytest.approx(
+        rt.profile.ops[0].retire + r1.cluster_makespan_cycles
+        + r2.cluster_makespan_cycles)
+    for prev, nxt in zip(rt.profile.ops, rt.profile.ops[1:]):
+        assert nxt.deps == (prev.op_id,)
+        assert nxt.start == pytest.approx(prev.retire)
+    rep = profile_report(rt)
+    assert rep.coverage_cycles == rep.makespan_cycles == \
+        pytest.approx(rt.profile.now)
+    assert rep.slack_cycles == 0.0
+
+
+def test_profiler_requires_an_op_log():
+    with pytest.raises(ValueError):
+        profile_report(PIMRuntime(channels=2))
+
+
+def test_profiler_is_strictly_additive():
+    bare = PIMRuntime(channels=4)
+    prof = PIMRuntime(channels=4, profile=True)
+    for rt in (bare, prof):
+        w = rt.place(A, placement="balanced")
+        rt.gemv(w, X, placement="balanced")
+        rt.gemm(A, B, placement="balanced")
+    assert emit_trace(bare.stack) == emit_trace(prof.stack)
+    _, rb = bare.elementwise("add", A, A, placement="balanced")
+    _, rp = prof.elementwise("add", A, A, placement="balanced")
+    assert rb == rp
+    assert [h.name for h in prof.profile.ops][-1] == "ew-add"
+
+
+def test_metrics_do_not_perturb_ledgers_or_traces():
+    m = MetricsRegistry()
+    bare = PIMRuntime(channels=2, stacks=2)
+    inst = PIMRuntime(channels=2, stacks=2, metrics=m)
+    a, b = rand(256, 128), rand(128, 128)
+    _, rb = bare.gemm(a, b, placement="2d-block")
+    _, ri = inst.gemm(a, b, placement="2d-block")
+    assert rb == ri
+    # the ledger == holds even though the instrumented link ledger
+    # carries a registry (compare=False field)
+    assert bare._cluster.link == inst._cluster.link
+    assert emit_trace(bare.stack) == emit_trace(inst.stack)
+    # ... and the registry actually observed the run
+    assert m.get("runtime.ops").value == 1
+    assert m.get("runtime.flops").value == ri.total_flops
+    def val(name):         # instruments are created on first charge only
+        inst_ = m.get(name)
+        return inst_.value if inst_ is not None else 0
+
+    assert val("link.xstack_bytes") + val("link.drain_bytes") == \
+        inst._cluster.link.bytes > 0
+    assert m.get("link.cycles").value == inst._cluster.link.cycles
+    assert m.get("runtime.op_makespan_cycles").count == 1
+
+
+def test_runtime_metrics_cover_residency_and_place():
+    m = MetricsRegistry()
+    rt = PIMRuntime(channels=4, metrics=m)
+    w = rt.place(A, placement="balanced")
+    rt.gemv(w, X, placement="balanced")
+    assert m.get("runtime.place_ops").value == 1
+    assert m.get("runtime.upload_bytes").value == A.nbytes
+    assert m.get("runtime.reuse_bytes").value == A.nbytes  # weights reused
+
+
+# ---------------------------------------------------------------------------
+# satellites: degenerate submit, multi-marker trace round-trip, summary
+# ---------------------------------------------------------------------------
+
+
+def test_timeline_degenerate_submit_normalizes():
+    rt = PIMRuntime(channels=2, async_mode=True)
+    h0 = rt.gemm(A, B, placement="balanced")
+    h = rt.timeline.submit("noop", {0: 0.0, 1: 0.0}, deps=[h0])
+    assert h.spans == {} and h.link_window is None
+    assert h.start == h.retire == h0.retire     # zero-length at ready
+    # with no deps it sits at t=0 and never moves the frontier
+    h2 = rt.timeline.submit("noop2", {})
+    assert h2.start == h2.retire == 0.0
+    assert rt.timeline.now == h0.retire
+    # the critical path hops through it without stalling
+    rep = critical_path(rt.timeline.ops)
+    assert rep.coverage_cycles == rep.makespan_cycles
+
+
+def test_all_marker_classes_round_trip_one_trace():
+    """# RESIDENT + # STACK/# HOSTLINK + # SPILL + # TSTART/# TEND in a
+    single trace: parse_trace sees every class, strip_timestamps recovers
+    the serialized twin's bytes."""
+    def drive(rt):
+        w = rt.place(A, placement="balanced")
+        rt.gemv(w, X, placement="balanced")          # -> # RESIDENT
+        a, b = rand(256, 128), rand(128, 128)
+        rt.gemm(a, b, placement="2d-block")          # -> # HOSTLINK
+        rt.place(rand(256, 128), placement="balanced")   # -> # SPILL
+        return rt
+
+    kw = dict(channels=2, stacks=2, capacity_bytes=20_000)
+    rng_state = rng.bit_generator.state
+    rs = drive(PIMRuntime(**kw))
+    rng.bit_generator.state = rng_state          # identical op stream
+    ra = drive(PIMRuntime(async_mode=True, **kw))
+
+    tr_a, tr_s = emit_trace(ra.stack), emit_trace(rs.stack)
+    st = parse_trace(tr_a)
+    assert sum(st.resident_bytes.values()) > 0   # residency reuse
+    assert sorted(set(st.stacks_seen)) == [0, 1]  # stack grouping
+    assert st.host_link_bytes["xstack"] > 0      # link traffic
+    assert sum(st.spill_bytes.values()) > 0      # capacity eviction
+    assert st.op_starts and st.op_ends           # async timestamps
+    # timestamps are the only difference from the serialized twin
+    assert tr_a != tr_s
+    assert strip_timestamps(tr_a) == tr_s
+    assert not parse_trace(tr_s).op_starts
+    # the stripped trace parses identically to the serialized one
+    stripped = parse_trace(strip_timestamps(tr_a))
+    assert stripped.resident_bytes == parse_trace(tr_s).resident_bytes
+    assert stripped.spill_bytes == parse_trace(tr_s).spill_bytes
+
+
+def test_multi_stack_summary_reports_link_and_residency():
+    rt = PIMRuntime(channels=2, stacks=2)
+    w = rt.place(A, placement="balanced")
+    _, rep = rt.gemv(w, X, placement="balanced")
+    text = rep.summary()
+    assert "stacks=2" in text and "link_util=" in text
+    assert f"reuse={A.nbytes}" in text and "spill=0" in text
+    # single-stack summaries keep the old single-line shape
+    rt1 = PIMRuntime(channels=2)
+    _, rep1 = rt1.gemm(A, B, placement="balanced")
+    assert "link_util=" not in rep1.summary()
+
+
+# ---------------------------------------------------------------------------
+# end to end: offload + server
+# ---------------------------------------------------------------------------
+
+
+def _cfg():
+    from repro.configs import get
+    return get("qwen3-1.7b").reduced()
+
+
+def test_async_offload_profile_end_to_end(tmp_path):
+    from repro.serve.offload import DecodeOffload
+
+    m = MetricsRegistry()
+    off = DecodeOffload(_cfg(), channels=8, stacks=2, placement="balanced",
+                        async_mode=True, metrics=m)
+    off.step(1), off.step(1)
+    p = tmp_path / "decode.json"
+    trace = export_chrome_trace(off.rt, str(p))
+    events = trace["traceEvents"]
+    assert any(e.get("ph") == "M" and e.get("name") == "process_name"
+               and e["args"]["name"] == "host-link" for e in events)
+    s_ids = sorted(e["id"] for e in events if e.get("ph") == "s")
+    assert s_ids == sorted(e["id"] for e in events if e.get("ph") == "f")
+    rep = profile_report(off.rt)
+    assert rep.makespan_cycles == off.rt.timeline.now
+    assert abs(rep.coverage_cycles - rep.makespan_cycles) <= \
+        1e-9 * max(1.0, rep.makespan_cycles)
+    assert m.get("offload.steps").value == 2
+    assert m.get("offload.step_pim_cycles").count == 2
+    assert m.get("offload.flops").value == sum(s.flops for s in off.steps)
+
+
+def test_offload_metrics_off_is_identical():
+    from repro.serve.offload import DecodeOffload
+
+    bare = DecodeOffload(_cfg(), channels=8, placement="balanced")
+    inst = DecodeOffload(_cfg(), channels=8, placement="balanced",
+                         metrics=MetricsRegistry())
+    rb, ri = bare.step(2), inst.step(2)
+    assert (rb.pim_cycles, rb.flops, rb.h2d_bytes, rb.reuse_bytes) == \
+        (ri.pim_cycles, ri.flops, ri.h2d_bytes, ri.reuse_bytes)
+
+
+def test_server_reports_ttft_tpot_percentiles():
+    import jax
+
+    from repro.configs import get
+    from repro.models import model as lm
+    from repro.serve.loop import Request, Server
+
+    cfg = get("qwen3-1.7b").reduced().replace(n_layers=2, d_model=64,
+                                              d_ff=128, vocab_size=128)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    m = MetricsRegistry()
+    srv = Server(cfg, params, slots=2, cache_len=48, metrics=m)
+    for uid in range(5):
+        srv.submit(Request(uid=uid,
+                           prompt=rng.integers(0, 127, 8).astype(np.int32),
+                           max_new=4))
+    done = srv.run_until_drained()
+    assert len(done) == 5
+    ttft, tpot = m.get("serve.ttft_s"), m.get("serve.tpot_s")
+    assert ttft.count == 5 and tpot.count == 5
+    assert ttft.percentile(99) >= ttft.percentile(50) > 0.0
+    assert m.get("serve.requests").value == 5
+    assert m.get("serve.tokens").value == sum(
+        len(r.out_tokens) for r in done)
+    assert m.get("serve.step_s").count > 0
+    # latency_summary works from timestamps alone and matches the registry
+    summ = srv.latency_summary()
+    assert summ["requests"] == 5
+    assert summ["ttft_s"]["p50"] == pytest.approx(ttft.percentile(50))
+    assert summ["tpot_s"]["count"] == 5
+    # an uninstrumented server still summarizes
+    srv2 = Server(cfg, params, slots=2, cache_len=48)
+    srv2.submit(Request(uid=0, prompt=np.arange(4, dtype=np.int32),
+                        max_new=2))
+    srv2.run_until_drained()
+    assert srv2.latency_summary()["requests"] == 1
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_summarizes_all_artifact_kinds(tmp_path, capsys):
+    from repro.obs.__main__ import main
+
+    rt = _async_cluster_rt()
+    chrome = tmp_path / "chrome.json"
+    export_chrome_trace(rt, str(chrome))
+    report = tmp_path / "report.json"
+    profile_report(rt).dump(str(report))
+    trace = tmp_path / "cmds.trace"
+    trace.write_text(emit_trace(rt.stack))
+
+    assert main([str(chrome)]) == 0
+    assert "chrome trace:" in capsys.readouterr().out
+    assert main([str(report), "--top", "2"]) == 0
+    assert "critical path" in capsys.readouterr().out
+    assert main([str(trace)]) == 0
+    assert "command trace:" in capsys.readouterr().out
+    bogus = tmp_path / "bogus.json"
+    bogus.write_text('{"nope": 1}')
+    assert main([str(bogus)]) == 2

@@ -33,6 +33,11 @@ cost model + the functional PIM engine.
             metrics-registry overhead gate (< 5% on instrumented async
             decode steps); gates feed ``results/BENCH_runtime.json``
             (CI ``bench-obs``)
+  faults  — fault injection + graceful degradation: 1-dead-channel-of-16
+            degradation curve (<= 16/15 x 1.05 of the ideal makespan),
+            empty-FaultPlan overhead (< 5%, ledgers/traces exactly
+            equal), and flaky-link seed determinism; gates feed
+            ``results/BENCH_runtime.json`` (CI ``bench-faults``)
 
 Each returns rows of (name, us_per_call, derived) where us_per_call is the
 measured host execution time of the functional engine (small tiles; the
@@ -327,6 +332,12 @@ LAST_DECODE_METRICS: dict = {}
 #: merged into ``results/BENCH_runtime.json`` the same way (CI
 #: ``bench-obs`` gates coverage == makespan and collection overhead)
 LAST_OBS_METRICS: dict = {}
+
+#: measured fault-injection metrics of the last ``faults`` section run —
+#: merged into ``results/BENCH_runtime.json`` the same way (CI
+#: ``bench-faults`` gates the degradation curve, empty-plan overhead,
+#: and seed determinism)
+LAST_FAULTS_METRICS: dict = {}
 
 
 def cluster_sweep() -> List[Row]:
@@ -743,6 +754,92 @@ def engine_bench() -> List[Row]:
     return rows
 
 
+def faults_sweep() -> List[Row]:
+    """Fault injection + graceful degradation gates (CI ``bench-faults``).
+
+    * **degradation curve** — killing 1 of 16 channels before a large
+      row-striped GEMM must cost no more than the ideal work
+      redistribution: ``degraded <= ideal * (16/15) * 1.05`` (the shape
+      is chosen so 240 row blocks divide evenly both ways, making 16/15
+      the exact redistribution factor);
+    * **empty-plan overhead < 5%** — attaching ``FaultPlan()`` must not
+      slow the runtime measurably (min-of-5 paired wall clocks), on top
+      of the exact ledger/trace equality the test suite already proves;
+    * **seed determinism** — two fresh runs of the same flaky-link
+      scenario produce ``==``-equal host-link ledgers.
+    """
+    rows: List[Row] = []
+    from repro.faults import FaultPlan, LinkTransient
+    from repro.runtime.trace import emit_trace
+
+    # -- degradation curve: 1 dead channel of 16 ------------------------
+    # 30720 rows = 240 row blocks: 240/16 = 15 and 240/15 = 16 blocks
+    # per channel, so ideal redistribution costs exactly 16/15
+    m, k, n = 30720, 256, 256
+    a = np.zeros((m, k), np.float16)
+    b = np.zeros((k, n), np.float16)
+    _, ideal = PIMRuntime(channels=16).gemm(a, b, placement="row-striped")
+    rt_deg = PIMRuntime(channels=16, faults="kill channel 0 @ 0")
+    _, deg = rt_deg.gemm(a, b, placement="row-striped")
+    ratio = deg.cluster_makespan_cycles / ideal.cluster_makespan_cycles
+    bound = (16 / 15) * 1.05
+    assert ratio <= bound, (ratio, bound)
+    assert deg.failed_channels == (0,)
+    rows.append(("faults/degradation_1of16", 0.0,
+                 f"ideal={ideal.cluster_makespan_cycles:.0f}cyc "
+                 f"degraded={deg.cluster_makespan_cycles:.0f}cyc "
+                 f"ratio={ratio:.4f} bound={bound:.4f}"))
+    LAST_FAULTS_METRICS.update(degradation_ratio=ratio,
+                               degradation_bound=bound)
+
+    # -- empty-plan overhead: min-of-paired wall clocks -----------------
+    def run_once(faults):
+        rt = PIMRuntime(channels=8, stacks=2, faults=faults)
+        h = rt.place((4096, 256), placement="row-striped", other_dim=1)
+        x = np.zeros(256, np.float16)
+        t0 = time.perf_counter()
+        for _ in range(8):
+            rt.gemv(h, x, placement="row-striped", execute=False)
+        return time.perf_counter() - t0, rt
+
+    bare_s = plan_s = float("inf")
+    for _ in range(5):
+        tb, rt_b = run_once(None)
+        tp, rt_p = run_once(FaultPlan())
+        bare_s, plan_s = min(bare_s, tb), min(plan_s, tp)
+    overhead = plan_s / bare_s
+    assert rt_b.stack.link == rt_p.stack.link
+    assert emit_trace(rt_b.stack) == emit_trace(rt_p.stack)
+    assert overhead < 1.05, overhead
+    rows.append(("faults/empty_plan_overhead", plan_s * 1e6,
+                 f"bare={bare_s * 1e6:.0f}us plan={plan_s * 1e6:.0f}us "
+                 f"ratio={overhead:.3f} (gate < 1.05)"))
+    LAST_FAULTS_METRICS.update(empty_plan_overhead=overhead)
+
+    # -- seed determinism: same scenario, same ledgers ------------------
+    def flaky_run():
+        plan = FaultPlan(seed=11, link_transient=LinkTransient(prob=0.7))
+        rt = PIMRuntime(channels=8, stacks=2, faults=plan)
+        h = rt.place((4096, 256), placement="row-striped", other_dim=1)
+        x = np.zeros(256, np.float16)
+        for _ in range(4):
+            rt.gemv(h, x, placement="row-striped", execute=False)
+        return rt
+
+    ra, rb = flaky_run(), flaky_run()
+    deterministic = (ra.stack.link == rb.stack.link
+                     and ra.faults.counters == rb.faults.counters)
+    assert deterministic
+    retries = int(ra.faults.counters.get("link_retries", 0))
+    assert retries > 0, "p=0.7 transient produced no retransmits"
+    rows.append(("faults/seed_determinism", 0.0,
+                 f"retries={retries} "
+                 f"link_cycles={ra.stack.link.cycles} identical=True"))
+    LAST_FAULTS_METRICS.update(seed_deterministic=float(deterministic),
+                               link_retries=float(retries))
+    return rows
+
+
 ALL = {
     "fig7": fig7_pep_cycles,
     "fig8": fig8_ame_instructions,
@@ -754,4 +851,5 @@ ALL = {
     "cluster": cluster_sweep,
     "decode": decode_async_sweep,
     "obs": obs_sweep,
+    "faults": faults_sweep,
 }

@@ -88,11 +88,13 @@ def write_bench_runtime(section_s: dict, out: Path = None) -> None:
     JSON next to the committed baseline and diffs the two.
     """
     from benchmarks.paper_figures import LAST_CLUSTER_METRICS, \
-        LAST_DECODE_METRICS, LAST_ENGINE_METRICS, LAST_OBS_METRICS
+        LAST_DECODE_METRICS, LAST_ENGINE_METRICS, LAST_FAULTS_METRICS, \
+        LAST_OBS_METRICS
     out = Path(out) if out is not None else BENCH_RUNTIME
     out.parent.mkdir(parents=True, exist_ok=True)
     rec = {"generated_by": "benchmarks.run", "section_wall_s": {},
-           "engine": {}, "cluster": {}, "decode": {}, "obs": {}}
+           "engine": {}, "cluster": {}, "decode": {}, "obs": {},
+           "faults": {}}
     if out.exists():
         try:
             prev = json.load(open(out))
@@ -101,6 +103,7 @@ def write_bench_runtime(section_s: dict, out: Path = None) -> None:
             rec["cluster"] = prev.get("cluster", {})
             rec["decode"] = prev.get("decode", {})
             rec["obs"] = prev.get("obs", {})
+            rec["faults"] = prev.get("faults", {})
         except (OSError, ValueError):
             pass
     rec["section_wall_s"].update(
@@ -115,6 +118,8 @@ def write_bench_runtime(section_s: dict, out: Path = None) -> None:
                           for k, v in LAST_DECODE_METRICS.items()})
     rec["obs"].update({k: round(v, 6)
                        for k, v in LAST_OBS_METRICS.items()})
+    rec["faults"].update({k: round(v, 6)
+                          for k, v in LAST_FAULTS_METRICS.items()})
     with open(out, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -1,0 +1,35 @@
+"""Deterministic fault injection + recovery for the PIM runtime stack.
+
+Scenario half: :mod:`repro.faults.plan` (frozen dataclasses + text DSL).
+Mechanism half: :mod:`repro.faults.injector` (firing, recovery,
+accounting).  Attach via ``PIMRuntime(faults=...)`` /
+``Server(faults=...)`` / ``DecodeOffload(faults=...)``; see
+docs/robustness.md for the model and its invariants.
+"""
+from repro.faults.injector import (
+    FaultError,
+    FaultInjector,
+    NoHealthyChannelsError,
+)
+from repro.faults.plan import (
+    ChannelFault,
+    FaultPlan,
+    LinkDegradation,
+    LinkTransient,
+    ServeFault,
+    StackFault,
+    as_plan,
+)
+
+__all__ = [
+    "ChannelFault",
+    "FaultError",
+    "FaultInjector",
+    "FaultPlan",
+    "LinkDegradation",
+    "LinkTransient",
+    "NoHealthyChannelsError",
+    "ServeFault",
+    "StackFault",
+    "as_plan",
+]

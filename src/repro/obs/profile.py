@@ -273,6 +273,23 @@ def chrome_trace(runtime) -> Dict:
             else:                            # degenerate consumer: drop tail
                 events.pop()
 
+    # fault-injection instants (repro.faults): injection / recovery /
+    # retransmit markers as Perfetto instant events on the affected
+    # channel's track (channel -1 = the host link)
+    inj = getattr(runtime, "faults", None)
+    if inj is not None:
+        for kind, cycle, ch, label in inj.instants:
+            if ch < 0:
+                pid, tid = link_pid, 0
+            else:
+                pid, tid = stack_of(ch), local_of(ch)
+            events.append({"ph": "i", "s": "g", "cat": "fault",
+                           "name": f"{kind}: {label}",
+                           "pid": pid, "tid": tid,
+                           "ts": cycle * US_PER_CYCLE,
+                           "args": {"kind": kind, "cycle": cycle,
+                                    "channel": ch}})
+
     makespan = max((h.retire for h in ops), default=0.0)
     return {
         "traceEvents": events,

@@ -66,8 +66,17 @@ class HostLinkLedger:
     ``events`` keeps (kind, nbytes) in charge order — ``"xstack"`` for
     cross-stack operand movement, ``"drain"`` for cross-stack K-split
     partial gathers — and is what the trace emitter serializes as
-    ``# HOSTLINK`` marker lines.
+    ``# HOSTLINK`` marker lines.  Fault injection (:mod:`repro.faults`)
+    adds three recovery/perturbation kinds: ``"reupload"`` (lost
+    resident shards re-shipped / failover weight migration),
+    ``"retry"`` (transient-corruption retransmits incl. backoff pause),
+    and ``"degrade"`` (bandwidth-degradation windows; the count slot
+    carries the *extra cycles*, since no new bytes move).
     """
+
+    #: event kinds `charge` accepts (degrade goes through charge_raw
+    #: only — its cycle cost is not a function of nbytes)
+    KINDS = ("xstack", "drain", "retry", "reupload")
 
     bytes: int = 0
     cycles: int = 0
@@ -82,10 +91,17 @@ class HostLinkLedger:
     # ones — the profiling-off byte-identity invariant
     metrics: Optional[object] = dataclasses.field(
         default=None, compare=False, repr=False)
+    # repro.faults.FaultInjector (attached via PIMRuntime(faults=));
+    # excluded from == for the same reason — an injector with an empty
+    # plan must leave the ledger ==-equal to a bare one
+    faults: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
-    def charge(self, kind: str, nbytes: int) -> int:
-        assert kind in ("xstack", "drain"), kind
-        cyc = host_link_cycles(nbytes)
+    def charge_raw(self, kind: str, nbytes: int, cyc: int) -> int:
+        """Record one link event at an explicit cycle cost — the base
+        accounting step :meth:`charge` and the fault injector's
+        retry/degrade perturbations share (never re-enters the fault
+        hook, so injected events cannot recurse)."""
         self.bytes += nbytes
         self.cycles += cyc
         self.events.append((kind, nbytes))
@@ -96,6 +112,13 @@ class HostLinkLedger:
             self.metrics.counter(
                 "link.cycles", unit="cycles",
                 help="host-link occupancy charged").inc(cyc)
+        return cyc
+
+    def charge(self, kind: str, nbytes: int) -> int:
+        assert kind in self.KINDS, kind
+        cyc = self.charge_raw(kind, nbytes, host_link_cycles(nbytes))
+        if self.faults is not None:
+            self.faults.on_link_charge(self, kind, nbytes, cyc)
         return cyc
 
 

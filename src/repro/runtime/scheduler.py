@@ -184,6 +184,9 @@ class RuntimeReport:
     stacks: int = 1                   # stacks behind the runtime
     host_link_bytes: int = 0          # inter-stack bytes over the host link
     host_link_cycles: int = 0
+    # fail-stopped flat channel ids at dispatch time (repro.faults) —
+    # non-empty reports ran degraded, on the surviving decomposition
+    failed_channels: Tuple[int, ...] = ()
 
     @property
     def makespan_cycles(self) -> float:
@@ -281,6 +284,13 @@ class RuntimeReport:
                      f"reuse={self.total_reuse_bytes} "
                      f"dedupe={self.total_dedupe_bytes} "
                      f"spill={self.total_spill_bytes}")
+        if self.failed_channels:
+            # degraded-makespan section: the op ran on the surviving
+            # decomposition, so makespan above IS the degraded figure
+            line += (f"\n  degraded: failed_channels="
+                     f"{list(self.failed_channels)} "
+                     f"surviving={self.channels}ch "
+                     f"makespan={self.makespan_cycles:.0f}cyc")
         return line
 
 
@@ -331,7 +341,7 @@ class PIMRuntime:
                  overlap: bool = True,
                  capacity_bytes: Optional[int] = None,
                  async_mode: bool = False,
-                 metrics=None, profile=None):
+                 metrics=None, profile=None, faults=None):
         assert engine in ENGINE_MODES, engine
         if stack is not None:
             if stacks != 1 or capacity_bytes is not None:
@@ -367,6 +377,16 @@ class PIMRuntime:
             from repro.obs.profile import Profiler
             prof = Profiler() if profile is True else profile
             self.profile = prof.attach(self)
+        # -- fault injection (repro.faults), same additive discipline:
+        # an attached *empty* plan leaves ledgers ==-equal and traces
+        # byte-identical, and with faults=None nothing below runs at all
+        self.faults = None
+        if faults is not None:
+            from repro.faults.injector import FaultInjector
+            from repro.faults.plan import as_plan
+            self.faults = FaultInjector(as_plan(faults), self)
+            if self._cluster is not None:
+                self._cluster.link.faults = self.faults
 
     # -- internals -----------------------------------------------------------
 
@@ -489,6 +509,21 @@ class PIMRuntime:
                     help="per-op cluster makespan distribution").record(
             report.cluster_makespan_cycles)
 
+    def _fault_epilogue(self, report: RuntimeReport,
+                        out_handle: Optional[DeviceTensor]) -> None:
+        """Per-op fault-injector bookkeeping: register kept outputs for
+        pinned-output replay (with their producer busy cycles), advance
+        the serialized fault clock, and close the op's lost-uid window."""
+        inj = self.faults
+        if out_handle is not None and out_handle.pending_d2h:
+            inj.register(out_handle)
+            busy_by = {c.channel: c.busy_cycles for c in report.per_channel}
+            for ch, _box in out_handle.pending_d2h:
+                inj.note_output(out_handle.uid, ch, busy_by.get(ch, 0.0))
+        if self.timeline is None:
+            inj.advance(report.cluster_makespan_cycles)
+        inj.end_op()
+
     def _submit_async(self, name: str, busy: Dict[int, float],
                       link_cycles: int, marks: Dict[int, int],
                       reads: Sequence[int], writes: Sequence[int],
@@ -552,7 +587,10 @@ class PIMRuntime:
             per_channel=tuple(reports),
             stacks=self.n_stacks,
             host_link_bytes=lb - link_before[0],
-            host_link_cycles=lc - link_before[1])
+            host_link_cycles=lc - link_before[1],
+            failed_channels=(tuple(sorted(self.faults.failed))
+                             if self.faults is not None
+                             and self.faults.failed else ()))
 
     def _ship_in(self, dev: PIMDevice, handle: Optional[DeviceTensor],
                  box: Box, shipped: Dict[int, Set], role: str,
@@ -575,6 +613,10 @@ class PIMRuntime:
                 dev.note_reuse(nbytes)
                 return False
             dev.host_to_pim(nbytes)
+            if self.faults is not None:
+                # a miss whose residency was lost to a channel failure is
+                # recovery traffic: the host link re-carries it on clusters
+                self.faults.on_reship(dev, handle.uid, nbytes)
             if link_seen is not None:
                 self._link_charge_ship(
                     (role, handle.uid, box),
@@ -633,6 +675,8 @@ class PIMRuntime:
                 f"PIMRuntime.place expects a 2D array or a (rows, cols) "
                 f"shape tuple, got shape {shape} — reshape/flatten to 2D "
                 f"(e.g. arr.reshape(rows, -1)) before placing")
+        if self.faults is not None:
+            stack, channels = self.faults.on_op(stack, channels)
         handle = DeviceTensor(self.stack, shape, values=arr)
         if role == "A":
             m, k = shape
@@ -672,6 +716,13 @@ class PIMRuntime:
                 help="one-time h2d charged by place()").inc(
                 sum(d.xfer.h2d_bytes - before_h2d_bytes[d.channel_id]
                     for d in op_devs))
+        if self.faults is not None:
+            if self.timeline is None:
+                self.faults.advance(max(
+                    max((float(d.xfer.h2d_cycles - before_h2d[d.channel_id])
+                         for d in op_devs), default=0.0),
+                    float(self._link_before()[1] - link_before[1])))
+            self.faults.end_op()
         if self.timeline is not None:
             busy = {d.channel_id:
                     float(d.xfer.h2d_cycles - before_h2d[d.channel_id])
@@ -728,6 +779,9 @@ class PIMRuntime:
         assert not execute or (a_vals is not None and b_vals is not None), \
             "analytic (shape-only) DeviceTensor operands require " \
             "execute=False"
+        if self.faults is not None:
+            # fire due fault events, then decompose over survivors only
+            stack, channels = self.faults.on_op(stack, channels)
         shards = self._shards(placement, m, k, n, stack, channels)
 
         op_devs = self._op_devices(stack, channels)
@@ -823,6 +877,8 @@ class PIMRuntime:
                               devices=op_devs)
         if self.metrics is not None:
             self._note_op(report)
+        if self.faults is not None:
+            self._fault_epilogue(report, out_handle)
         result = out_handle if keep_output \
             else (jnp.asarray(out) if execute else None)
         if self.timeline is not None:
@@ -906,6 +962,8 @@ class PIMRuntime:
         assert not execute or (a_vals is not None and b_vals is not None), \
             "analytic (shape-only) DeviceTensor operands require " \
             "execute=False"
+        if self.faults is not None:
+            stack, channels = self.faults.on_op(stack, channels)
         shards = self._shards(placement, m, c, 1, stack, channels)
 
         op_devs = self._op_devices(stack, channels)
@@ -963,6 +1021,8 @@ class PIMRuntime:
                               devices=op_devs)
         if self.metrics is not None:
             self._note_op(report)
+        if self.faults is not None:
+            self._fault_epilogue(report, out_handle)
         result = out_handle if keep_output \
             else (jnp.asarray(out) if execute else None)
         if self.timeline is not None:

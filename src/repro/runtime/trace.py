@@ -32,9 +32,20 @@ tools skip them; :func:`parse_trace` round-trips them):
 
     # STACK <s>                   -- following channels belong to stack s
     # HOSTLINK <kind> <bytes>     -- inter-stack bytes over the host link
-                                     (kind: xstack | drain)
+                                     (kind: xstack | drain, plus the
+                                     fault-injection kinds retry |
+                                     reupload | degrade — degrade's count
+                                     slot carries extra cycles, not bytes)
     # SPILL <channel> <bytes>     -- residency evicted under a capacity
                                      bound (re-shipped on next use)
+
+Fault injection (:mod:`repro.faults`) adds two more replay-neutral
+markers on the affected channel's stream::
+
+    # FAULT <channel> <cycle>     -- fail-stop injected at that cycle
+    # RECOVER <channel> <bytes>   -- recovery traffic landed here (lost
+                                     shards re-shipped / pinned outputs
+                                     replayed from the last host copy)
 
 A single-stack cluster emits none of these (no ``# STACK 0``), so its
 trace is byte-identical to a bare :class:`PIMStack`'s; ``# SPILL`` lines
@@ -232,6 +243,14 @@ def _emit_device(lines: List[str], dev) -> None:
             op_id, cycles = payload
             tag = "TSTART" if kind == "tstart" else "TEND"
             lines.append(f"# {tag} {dev.channel_id} {op_id} {cycles:.3f}")
+        elif kind == "fault":
+            # fail-stop injected (repro.faults): zero commands — the
+            # channel simply issues nothing afterwards
+            lines.append(f"# FAULT {dev.channel_id} {payload:.3f}")
+        elif kind == "recover":
+            # recovery landed here: the matching traffic is real MEM
+            # lines (re-ship) or analytic busy time (output replay)
+            lines.append(f"# RECOVER {dev.channel_id} {payload}")
         elif kind == "instr":
             # whole-shard spans (the fast paths' aggregated records)
             # expand to the identical per-tile instruction sequence,
@@ -341,6 +360,13 @@ class TraceStats:
     host_link_bytes: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)       # per kind (xstack|drain)
     host_link_events: int = 0
+    # -- fault-injection markers (repro.faults): channel -> injection
+    # cycle, and recovery bytes landed per channel.  Empty on fault-free
+    # traces (the markers only exist when a fault actually fired) -------
+    fault_channels: Dict[int, float] = dataclasses.field(
+        default_factory=dict)
+    recover_bytes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per channel
 
     @property
     def channels(self):
@@ -355,8 +381,11 @@ class TraceStats:
 _CHANNEL_RE = re.compile(r"^# channel (\d+)$")
 _RESIDENT_RE = re.compile(r"^# RESIDENT (\d+) (\d+)$")
 _STACK_RE = re.compile(r"^# STACK (\d+)$")
-_HOSTLINK_RE = re.compile(r"^# HOSTLINK (xstack|drain) (\d+)$")
+_HOSTLINK_RE = re.compile(
+    r"^# HOSTLINK (xstack|drain|retry|reupload|degrade) (\d+)$")
 _SPILL_RE = re.compile(r"^# SPILL (\d+) (\d+)$")
+_FAULT_RE = re.compile(r"^# FAULT (\d+) ([0-9.]+)$")
+_RECOVER_RE = re.compile(r"^# RECOVER (\d+) (\d+)$")
 _TSTART_RE = re.compile(r"^# TSTART (\d+) (\d+) ([0-9.]+)$")
 _TEND_RE = re.compile(r"^# TEND (\d+) (\d+) ([0-9.]+)$")
 _TS_LINE_RE = re.compile(r"^# T(?:START|END) ")
@@ -407,6 +436,14 @@ def parse_trace(text: str) -> TraceStats:
         if mm:
             stats.op_ends[(int(mm.group(1)), int(mm.group(2)))] = \
                 float(mm.group(3))
+            continue
+        mm = _FAULT_RE.match(line)
+        if mm:
+            stats.fault_channels[int(mm.group(1))] = float(mm.group(2))
+            continue
+        mm = _RECOVER_RE.match(line)
+        if mm:
+            stats.recover_bytes[int(mm.group(1))] += int(mm.group(2))
             continue
         if line.startswith("#"):
             continue

@@ -15,11 +15,24 @@ roofline without touching the serving numerics — see
 on the per-channel engines and cross-checks every output — lm_head
 logits included — against an XLA reference within FP16 accumulation
 tolerance, while charging the same ledgers as the analytic sidecar.
+
+Graceful degradation (:mod:`repro.faults`): ``Server(faults=...)``
+accepts a :class:`~repro.faults.plan.FaultPlan` (or DSL string) and
+consumes its :class:`~repro.faults.plan.ServeFault` entries — the
+request decoding in the named slot at the named iteration is knocked
+out and requeued with per-request exponential backoff
+(``retry_backoff_steps`` doubling per retry, capped), failing
+permanently after ``max_retries``.  ``step_deadline_s`` counts
+over-deadline serving iterations; ``max_queue`` turns :meth:`submit`
+into admission control that sheds load (:class:`AdmissionError`) when
+the queue exceeds the cap *scaled by surviving PIM capacity* — a
+half-dead offload cluster halves what the server accepts.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
 from typing import Callable, Dict, List, Optional
 
 import jax
@@ -32,6 +45,11 @@ from repro.obs.metrics import Histogram
 from repro.serve.offload import DecodeOffload
 
 
+class AdmissionError(RuntimeError):
+    """Admission control shed this request (queue over the surviving-
+    capacity-scaled cap).  Callers should back off and resubmit."""
+
+
 @dataclasses.dataclass
 class Request:
     uid: int
@@ -42,13 +60,20 @@ class Request:
     submitted_at: float = 0.0
     first_token_at: float = 0.0     # prefill produced the first token
     finished_at: float = 0.0
+    retries: int = 0                # fault knock-outs survived so far
+    not_before: int = 0             # earliest serving iteration to re-admit
 
 
 class Server:
     def __init__(self, cfg: ArchConfig, params, slots: int = 4,
                  cache_len: int = 128, eos_id: Optional[int] = None,
                  pim_offload: Optional[DecodeOffload] = None,
-                 metrics=None):
+                 metrics=None, faults=None,
+                 step_deadline_s: Optional[float] = None,
+                 max_queue: Optional[int] = None,
+                 retry_backoff_steps: int = 2,
+                 retry_backoff_cap: int = 16,
+                 max_retries: int = 2):
         self.cfg = cfg
         self.params = params
         self.slots = slots
@@ -64,6 +89,24 @@ class Server:
         self.caches = lm.make_caches(cfg, slots, cache_len)
         self.queue: List[Request] = []
         self.completed: List[Request] = []
+        # -- graceful degradation state (all zero / empty without faults)
+        self.step_deadline_s = step_deadline_s
+        self.max_queue = max_queue
+        self.retry_backoff_steps = retry_backoff_steps
+        self.retry_backoff_cap = retry_backoff_cap
+        self.max_retries = max_retries
+        self.failed_requests: List[Request] = []
+        self.shed = 0                   # submissions refused at admission
+        self.deadline_misses = 0        # serving iterations over deadline
+        self.retries_total = 0          # fault knock-outs requeued
+        self.undrained = 0              # left pending by run_until_drained
+        self._iter = 0                  # serving-iteration counter (1-based)
+        self._serve_faults: List = []
+        if faults is not None:
+            from repro.faults.plan import as_plan
+            self._serve_faults = sorted(
+                as_plan(faults).serve_faults,
+                key=lambda f: (f.at_iter, f.slot))
 
         self._decode = jax.jit(
             lambda p, t, ps, c: lm.decode_step(p, t, ps, c, cfg),
@@ -72,15 +115,90 @@ class Server:
             lambda p, toks: lm.prefill(p, {"tokens": toks}, cfg,
                                        cache_len=cache_len))
 
+    def _check_prompt(self, req: Request) -> None:
+        """A prompt must leave at least one cache position for decode —
+        longer ones would silently corrupt the slot cache at prefill."""
+        if len(req.prompt) >= self.cache_len:
+            raise ValueError(
+                f"prompt of request uid={req.uid} has {len(req.prompt)} "
+                f"tokens but cache_len={self.cache_len} leaves no room "
+                f"to decode — truncate the prompt or grow cache_len")
+
+    @property
+    def surviving_fraction(self) -> float:
+        """Fraction of PIM decode capacity still alive (1.0 without an
+        offload sidecar or without faults) — scales the admission cap."""
+        off = self.pim_offload
+        return off.surviving_fraction if off is not None else 1.0
+
     def submit(self, req: Request):
+        self._check_prompt(req)
+        if self.max_queue is not None:
+            cap = max(1, int(self.max_queue * self.surviving_fraction))
+            if len(self.queue) >= cap:
+                self.shed += 1
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "serve.shed", unit="requests",
+                        help="submissions shed by admission control").inc()
+                raise AdmissionError(
+                    f"queue at {len(self.queue)} >= cap {cap} "
+                    f"(max_queue={self.max_queue}, surviving="
+                    f"{self.surviving_fraction:.2f}); shedding "
+                    f"request uid={req.uid}")
         req.submitted_at = time.time()
         self.queue.append(req)
 
+    def _apply_serve_faults(self):
+        """Fire ServeFaults due this iteration: knock out the slot's
+        request and requeue it with exponential backoff (or fail it
+        permanently past max_retries)."""
+        due = [f for f in self._serve_faults if f.at_iter == self._iter]
+        if not due:
+            return
+        self._serve_faults = [f for f in self._serve_faults
+                              if f.at_iter != self._iter]
+        for f in due:
+            if f.slot >= self.slots or self.active[f.slot] is None:
+                continue
+            req = self.active[f.slot]
+            self.active[f.slot] = None
+            # the slot's cache is considered poisoned: restart the
+            # request from its prompt (prefill re-runs on re-admission)
+            req.out_tokens = []
+            req.first_token_at = 0.0
+            req.retries += 1
+            if req.retries > self.max_retries:
+                req.done = True
+                req.finished_at = time.time()
+                self.failed_requests.append(req)
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "serve.failed", unit="requests",
+                        help="requests failed past max_retries").inc()
+                continue
+            backoff = min(
+                self.retry_backoff_steps * 2 ** (req.retries - 1),
+                self.retry_backoff_cap)
+            req.not_before = self._iter + backoff
+            self.queue.append(req)
+            self.retries_total += 1
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "serve.retries", unit="requests",
+                    help="fault knock-outs requeued with backoff").inc()
+
     def _admit(self):
-        """Prefill queued requests into free slots."""
+        """Prefill queued requests into free slots (FIFO among requests
+        whose retry backoff has elapsed)."""
         for i in range(self.slots):
             if self.active[i] is None and self.queue:
-                req = self.queue.pop(0)
+                idx = next((j for j, r in enumerate(self.queue)
+                            if r.not_before <= self._iter), None)
+                if idx is None:
+                    return           # everything queued is backing off
+                req = self.queue.pop(idx)
+                self._check_prompt(req)
                 logits, fresh = self._prefill_one(
                     self.params, jnp.asarray(req.prompt[None, :]))
                 # splice slot i's cache from the single-seq prefill cache
@@ -122,12 +240,20 @@ class Server:
                     / (len(req.out_tokens) - 1))
 
     def step(self):
-        """One serving iteration: admit, batched decode, retire."""
-        t0 = time.time() if self.metrics is not None else 0.0
+        """One serving iteration: fire serve faults, admit, batched
+        decode, retire; count the iteration against the step deadline."""
+        track_wall = self.metrics is not None \
+            or self.step_deadline_s is not None
+        t0 = time.time() if track_wall else 0.0
+        self._iter += 1
+        self._apply_serve_faults()
         self._admit()
         live = [i for i in range(self.slots) if self.active[i] is not None]
         if not live:
-            return False
+            # backing-off requests still count as pending work: report
+            # True so run_until_drained keeps iterating toward their
+            # re-admission instead of spinning the caller's loop exit
+            return bool(self.queue)
         toks = np.zeros((self.slots, 1), np.int32)
         for i in live:
             toks[i, 0] = self.active[i].out_tokens[-1]
@@ -145,22 +271,55 @@ class Server:
             if (len(req.out_tokens) >= req.max_new or hit_eos
                     or int(self.pos[i]) >= self.cache_len - 1):
                 self._retire(i)
-        if self.metrics is not None:
-            self.metrics.histogram(
-                "serve.step_s", unit="s",
-                help="serving-iteration wall time").record(
-                time.time() - t0)
-            self.metrics.gauge(
-                "serve.live_slots", unit="slots",
-                help="slots decoding in the last iteration").set(len(live))
+        if track_wall:
+            wall = time.time() - t0
+            if self.step_deadline_s is not None \
+                    and wall > self.step_deadline_s:
+                self.deadline_misses += 1
+                if self.metrics is not None:
+                    self.metrics.counter(
+                        "serve.deadline_misses", unit="steps",
+                        help="serving iterations over step_deadline_s"
+                    ).inc()
+            if self.metrics is not None:
+                self.metrics.histogram(
+                    "serve.step_s", unit="s",
+                    help="serving-iteration wall time").record(wall)
+                self.metrics.gauge(
+                    "serve.live_slots", unit="slots",
+                    help="slots decoding in the last iteration").set(
+                    len(live))
         return True
 
-    def run_until_drained(self, max_iters: int = 10_000):
+    def run_until_drained(self, max_iters: int = 10_000,
+                          on_undrained: str = "raise"):
+        """Step until every request completes (or fails permanently).
+
+        If ``max_iters`` exhausts with requests still queued or active,
+        the default ``on_undrained="raise"`` raises ``RuntimeError`` —
+        a hung serving loop must not masquerade as success.
+        ``on_undrained="warn"`` downgrades to a ``RuntimeWarning`` and
+        returns the partial results; either way the pending count is
+        recorded in :attr:`undrained` / :meth:`latency_summary`.
+        """
+        if on_undrained not in ("raise", "warn"):
+            raise ValueError(
+                f"on_undrained must be 'raise' or 'warn', "
+                f"got {on_undrained!r}")
         it = 0
         while (self.queue or any(a is not None for a in self.active)) \
                 and it < max_iters:
             self.step()
             it += 1
+        self.undrained = len(self.queue) \
+            + sum(a is not None for a in self.active)
+        if self.undrained:
+            msg = (f"run_until_drained exhausted max_iters={max_iters} "
+                   f"with {self.undrained} request(s) still "
+                   f"queued/active ({len(self.completed)} completed)")
+            if on_undrained == "raise":
+                raise RuntimeError(msg)
+            warnings.warn(msg, RuntimeWarning, stacklevel=2)
         return self.completed
 
     def latency_summary(self) -> Dict:
@@ -184,6 +343,12 @@ class Server:
             "tokens": sum(len(r.out_tokens) for r in self.completed),
             "ttft_s": ttft.summary(),
             "tpot_s": tpot.summary(),
+            # degradation accounting (all zero on a fault-free run)
+            "undrained": self.undrained,
+            "failed": len(self.failed_requests),
+            "shed": self.shed,
+            "deadline_misses": self.deadline_misses,
+            "retries": self.retries_total,
         }
 
 

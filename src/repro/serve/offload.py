@@ -354,7 +354,7 @@ class DecodeOffload:
                  placement: str = "balanced", numeric: bool = False,
                  seed: int = 0, atol: float = NUMERIC_ATOL,
                  engine: str = "batched", async_mode: bool = False,
-                 split_batch: int = 1, metrics=None):
+                 split_batch: int = 1, metrics=None, faults=None):
         self.cfg = cfg
         self.placement = placement
         self.numeric = numeric
@@ -372,7 +372,7 @@ class DecodeOffload:
         self._split_batch = split_batch
         self.rt = PIMRuntime(channels=channels, stacks=stacks,
                              engine=engine, async_mode=async_mode,
-                             metrics=metrics)
+                             metrics=metrics, faults=faults)
         self.matmuls = decode_matmuls(cfg)
         if numeric and self.weight_bytes > NUMERIC_MAX_WEIGHT_BYTES:
             raise ValueError(
@@ -386,6 +386,9 @@ class DecodeOffload:
         # and the hidden-state hand-off between them never crosses it
         layer_stacks = ame_pim_stack_map(cfg, stacks)["layers"] \
             if stacks > 1 else None
+        # live per-layer home map (failover remaps dead stacks' entries)
+        self.stack_map: Optional[List[int]] = \
+            list(layer_stacks) if layer_stacks is not None else None
         self.weights: List[Tuple[DecodeMatmul,
                                  List[Tuple[Optional[int],
                                             DeviceTensor]]]] = []
@@ -584,6 +587,126 @@ class DecodeOffload:
             self.last_logits = np.asarray(y)
         return err, logits_err
 
+    # -- fault failover (repro.faults) ---------------------------------------
+
+    @property
+    def surviving_fraction(self) -> float:
+        """Fraction of the runtime's channels still healthy (1.0 without
+        an attached fault plan) — the server's admission-control input."""
+        inj = self.rt.faults
+        if inj is None:
+            return 1.0
+        total = len(self.rt.stack)
+        return (total - len(inj.failed)) / total
+
+    def _maybe_failover(self) -> None:
+        """Step-boundary failover: if a whole home stack has fail-stopped
+        since the last step, migrate its weights to a survivor.
+
+        Failover is step-granular by design — a step already dispatched
+        completes on the pre-fault decomposition; the *next* step sees
+        the remap (the retry unit real serving systems use).  Partial
+        stack failures need no action here: the scheduler's healthy-
+        subset remap already decomposes over the surviving channels.
+        """
+        inj = self.rt.faults
+        if inj is None or self.stacks == 1:
+            return
+        inj.poll()
+        if not inj.failed:
+            return
+        cps = self.rt.stack.channels_per_stack
+        dead = {s for s in range(self.stacks)
+                if all(s * cps + c in inj.failed for c in range(cps))}
+        homes = set(self.stack_map or ())
+        for s in sorted(dead & homes):
+            self._failover_stack(s, inj)
+
+    def _failover_stack(self, dead: int, inj) -> None:
+        """Migrate every weight homed on ``dead`` to the surviving stack
+        carrying the least homed weight bytes, charging the migration on
+        the host link as ``reupload`` traffic (the host re-carries the
+        weights from its mirror — weights are immutable after placement,
+        so the host copy is exact)."""
+        cps = self.rt.stack.channels_per_stack
+        alive = [s for s in range(self.stacks)
+                 if any(s * cps + c not in inj.failed for c in range(cps))]
+        if not alive:
+            from repro.faults.injector import NoHealthyChannelsError
+            raise NoHealthyChannelsError(
+                "every stack has failed; nowhere to fail weights over to")
+        homed = {}
+        for m, handles in self.weights:
+            for home, _h in handles:
+                if home is not None:
+                    homed[home] = homed.get(home, 0) \
+                        + m.out_dim * m.in_dim * BYTES_PER_ELEM
+        survivor = min(alive, key=lambda s: (homed.get(s, 0), s))
+        migrated = 0
+        replaced: Dict[int, DeviceTensor] = {}
+        if self.async_mode:
+            healthy = tuple(c for c in self._stack_channels(survivor)
+                            if c not in inj.failed)
+            new_stages = []
+            for stage in self._stages:
+                if stage[0].channels[0] // cps != dead:
+                    new_stages.append(stage)
+                    continue
+                if len(stage) <= len(healthy):
+                    split = _group_split(
+                        tuple((op.out_dim, op.in_dim) for op in stage),
+                        len(healthy), self.placement, self._split_batch)
+                    subs, c0 = [], 0
+                    for nch in split:
+                        subs.append(healthy[c0:c0 + nch])
+                        c0 += nch
+                else:
+                    # fewer healthy channels than ops: share the full
+                    # subset — the timeline serializes contenders
+                    subs = [healthy] * len(stage)
+                new_stage = []
+                for op, sub in zip(stage, subs):
+                    op.handle.evict()
+                    payload = op.handle.values if self.numeric \
+                        else (op.out_dim, op.in_dim)
+                    nh = self.rt.place(payload, placement=self.placement,
+                                       channels=sub)
+                    replaced[op.handle.uid] = nh
+                    migrated += op.out_dim * op.in_dim * BYTES_PER_ELEM
+                    new_stage.append(_AsyncOp(op.name, op.out_dim,
+                                              op.in_dim, nh, sub))
+                new_stages.append(new_stage)
+            self._stages = new_stages
+        new_weights = []
+        for m, handles in self.weights:
+            hs = []
+            for home, h in handles:
+                if home == dead:
+                    if h.uid in replaced:
+                        h = replaced[h.uid]
+                    else:                     # serialized: migrate now
+                        h.evict()
+                        payload = h.values if self.numeric \
+                            else (m.out_dim, m.in_dim)
+                        h = self.rt.place(payload,
+                                          placement=self.placement,
+                                          stack=survivor)
+                        migrated += m.out_dim * m.in_dim * BYTES_PER_ELEM
+                    home = survivor
+                hs.append((home, h))
+            new_weights.append((m, hs))
+        self.weights = new_weights
+        if self.stack_map is not None:
+            self.stack_map = [survivor if s == dead else s
+                              for s in self.stack_map]
+        self.rt.stack.link.charge("reupload", migrated)
+        inj.count("stack_failovers", 1)
+        inj.count("failover_migrated_bytes", migrated)
+        inj.instants.append(
+            ("failover", inj.now, -1,
+             f"stack {dead} weights -> stack {survivor} "
+             f"({migrated} bytes)"))
+
     def step(self, batch: int) -> StepRecord:
         """Account (and in numeric mode, execute) one decode step over
         ``batch`` live slots.
@@ -592,7 +715,35 @@ class DecodeOffload:
         ops within a stage overlap on their channel groups) and
         ``pim_cycles`` is the step's timeline makespan; serialized mode
         sums per-op makespans as before.
+
+        With a fault plan attached, a home stack that fully fail-stopped
+        since the last step first fails its weights over to a survivor
+        (:meth:`_maybe_failover`); the step then runs on the remapped
+        homes.  A stack that dies *mid-step* aborts the attempt with
+        :class:`~repro.faults.injector.NoHealthyChannelsError` — the
+        step fails over and replays from its start (ops submitted
+        before the abort stay on the ledgers as wasted work).
+        :meth:`pipeline` does not fail over (accounting-only wave
+        studies fix their topology up front).
         """
+        from repro.faults.injector import NoHealthyChannelsError
+        self._maybe_failover()
+        try:
+            return self._step_once(batch)
+        except NoHealthyChannelsError:
+            failovers = (self.rt.faults.counters.get("stack_failovers", 0)
+                         if self.rt.faults is not None else 0)
+            self._maybe_failover()
+            now = (self.rt.faults.counters.get("stack_failovers", 0)
+                   if self.rt.faults is not None else 0)
+            if now == failovers:
+                # nothing migrated (partial stack death, or no survivor
+                # to migrate to) — the fault is not recoverable here
+                raise
+            return self._step_once(batch)
+
+    def _step_once(self, batch: int) -> StepRecord:
+        """One attempt at a decode step (see :meth:`step`)."""
         before = {d.channel_id: d.snapshot() for d in self.rt.stack}
         pim_cycles = 0.0
         flops = 0

@@ -1,0 +1,518 @@
+"""Fault injection + graceful degradation tests (repro.faults).
+
+Invariants under test, in rough dependency order:
+
+* An **empty FaultPlan is strictly additive**: ledgers compare ``==``
+  and emitted traces are byte-identical to a fault-free runtime, in
+  both serialized and async modes.
+* **Fail-stop channels are excluded** from placement decompositions
+  (the PR-5 ``channels=`` subset machinery) and reported in
+  ``RuntimeReport.failed_channels`` + the degraded summary section.
+* **Lost residency is re-shipped**: shards resident on failed channels
+  are declared lost and their re-upload charged as host-link
+  ``reupload`` traffic at next use; pinned undrained outputs replay
+  onto survivors and ``to_host`` still matches the FP32 reference.
+* **Transient link corruption** charges seeded retry-with-backoff busy
+  windows — same seed, same ledgers; **degradation windows** stretch
+  in-window link charges.
+* ``# FAULT`` / ``# RECOVER`` markers are replay-neutral and round-trip
+  through ``parse_trace``.
+* ``DecodeOffload`` **fails over** a dead home stack's weights to the
+  least-loaded survivor (numeric mode cross-checks vs XLA FP32 after
+  the failover), and ``Server`` degrades gracefully: slot knock-outs
+  requeue with capped exponential backoff, admission control sheds
+  load against surviving capacity, and ``run_until_drained`` never
+  masquerades a hung loop as success.
+"""
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.faults import (
+    ChannelFault,
+    FaultPlan,
+    LinkDegradation,
+    LinkTransient,
+    NoHealthyChannelsError,
+    ServeFault,
+    StackFault,
+    as_plan,
+)
+from repro.runtime import PIMRuntime
+from repro.runtime.trace import emit_trace, parse_trace
+from repro.serve.offload import DecodeOffload
+
+RNG = np.random.default_rng(3)
+
+
+def rand(*shape, scale=0.1):
+    return (RNG.standard_normal(shape) * scale).astype(np.float16)
+
+
+def _workload(rt, execute=False):
+    """A small mixed workload touching place/gemv/gemm."""
+    h = rt.place((2048, 128), placement="row-striped", other_dim=1) \
+        if not execute else rt.place(rand(2048, 128),
+                                     placement="row-striped", other_dim=1)
+    x = rand(128)
+    rt.gemv(h, x, placement="row-striped", execute=execute)
+    rt.gemv(h, x, placement="row-striped", execute=execute)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# empty plan: strictly additive
+# ---------------------------------------------------------------------------
+
+
+def test_empty_plan_is_strictly_additive_serialized():
+    plain = PIMRuntime(channels=4, stacks=2)
+    faulted = PIMRuntime(channels=4, stacks=2, faults=FaultPlan())
+    assert faulted.faults is not None and faulted.faults.plan.empty
+    _workload(plain)
+    _workload(faulted)
+    assert plain.stack.link == faulted.stack.link
+    assert emit_trace(plain.stack) == emit_trace(faulted.stack)
+    assert faulted.faults.counters == {}
+    assert faulted.faults.instants == []
+
+
+def test_empty_plan_is_strictly_additive_async():
+    plain = PIMRuntime(channels=4, stacks=2, async_mode=True)
+    faulted = PIMRuntime(channels=4, stacks=2, async_mode=True,
+                         faults=FaultPlan())
+    for rt in (plain, faulted):
+        h = rt.place((2048, 128), placement="row-striped", other_dim=1)
+        x = rand(128)
+        rt.gemv(h, x, placement="row-striped", execute=False)
+        rt.gemv(h, x, placement="row-striped", execute=False)
+    assert plain.timeline.now == faulted.timeline.now
+    assert plain.stack.link == faulted.stack.link
+    assert emit_trace(plain.stack) == emit_trace(faulted.stack)
+
+
+def test_empty_plan_dsl_string_accepted():
+    rt = PIMRuntime(channels=2, faults="# nothing to see\n")
+    assert rt.faults.plan.empty
+
+
+# ---------------------------------------------------------------------------
+# fail-stop channels: exclusion + reporting
+# ---------------------------------------------------------------------------
+
+
+def test_channel_fault_excluded_from_decomposition():
+    plan = FaultPlan(channel_faults=(ChannelFault(at_cycle=0.0, channel=1),))
+    rt = PIMRuntime(channels=4, faults=plan)
+    a, b = rand(512, 64), rand(64, 32)
+    _, rep = rt.gemm(a, b, placement="row-striped")
+    assert rep.failed_channels == (1,)
+    busy = {c.channel: c.busy_cycles for c in rep.per_channel}
+    assert busy.get(1, 0.0) == 0.0
+    assert sum(1 for c in rep.per_channel if c.busy_cycles > 0) == 3
+    assert "degraded:" in rep.summary()
+    assert "failed_channels=[1]" in rep.summary()
+
+
+def test_fault_free_report_has_no_degraded_section():
+    rt = PIMRuntime(channels=4)
+    _, rep = rt.gemm(rand(512, 64), rand(64, 32), placement="row-striped")
+    assert rep.failed_channels == ()
+    assert "degraded:" not in rep.summary()
+
+
+def test_all_channels_failed_raises():
+    plan = FaultPlan(channel_faults=tuple(
+        ChannelFault(at_cycle=0.0, channel=c) for c in range(2)))
+    rt = PIMRuntime(channels=2, faults=plan)
+    with pytest.raises(NoHealthyChannelsError):
+        rt.gemm(rand(256, 64), rand(64, 16), placement="row-striped")
+
+
+def test_explicit_subset_remaps_to_survivors():
+    plan = FaultPlan(channel_faults=(ChannelFault(at_cycle=0.0, channel=2),))
+    rt = PIMRuntime(channels=4, faults=plan)
+    _, rep = rt.gemm(rand(512, 64), rand(64, 32), placement="row-striped",
+                     channels=(1, 2, 3))
+    busy = {c.channel: c.busy_cycles for c in rep.per_channel}
+    assert busy.get(2, 0.0) == 0.0
+    assert busy.get(1, 0.0) > 0 and busy.get(3, 0.0) > 0
+
+
+def test_fault_out_of_range_rejected_at_construction():
+    with pytest.raises(ValueError):
+        PIMRuntime(channels=2, faults=FaultPlan(
+            channel_faults=(ChannelFault(at_cycle=0.0, channel=9),)))
+    with pytest.raises(ValueError):
+        PIMRuntime(channels=2, stacks=2, faults=FaultPlan(
+            stack_faults=(StackFault(at_cycle=0.0, stack=5),)))
+
+
+# ---------------------------------------------------------------------------
+# lost residency -> re-upload; pinned outputs -> replay
+# ---------------------------------------------------------------------------
+
+
+def test_stack_fault_loses_residency_and_recharges_reupload():
+    plan = FaultPlan(stack_faults=(StackFault(at_cycle=10.0, stack=1),))
+    rt = PIMRuntime(channels=4, stacks=2, faults=plan)
+    h = rt.place((2048, 128), placement="row-striped", other_dim=1)
+    assert all(d.resident for d in rt.stack), \
+        "scenario needs shards on every channel"
+    x = rand(128)
+    rt.gemv(h, x, placement="row-striped", execute=False)       # fault fires at op boundary
+    assert rt.faults.failed == {4, 5, 6, 7}
+    # survivors held their shards; the lost half re-ships on next use and
+    # is charged on the host link as reupload traffic
+    link_before = [k for k, _ in rt.stack.link.events]
+    _, rep = rt.gemv(h, x, placement="row-striped", execute=False)
+    reups = [(k, n) for k, n in rt.stack.link.events if k == "reupload"]
+    assert len(reups) == 4                       # one per surviving channel
+    assert sum(n for _, n in reups) == \
+        rt.faults.counters["reupload_bytes"]
+    assert rt.faults.counters["lost_resident_bytes"] > 0
+    assert rt.faults.counters["stack_failures"] == 1
+    assert rt.faults.counters["channel_failures"] == 4
+
+
+def test_fault_and_recover_markers_roundtrip():
+    plan = FaultPlan(stack_faults=(StackFault(at_cycle=10.0, stack=1),))
+    rt = PIMRuntime(channels=4, stacks=2, faults=plan)
+    h = rt.place((2048, 128), placement="row-striped", other_dim=1)
+    x = rand(128)
+    rt.gemv(h, x, placement="row-striped", execute=False)
+    rt.gemv(h, x, placement="row-striped", execute=False)
+    st = parse_trace(emit_trace(rt.stack))
+    assert set(st.fault_channels) == {4, 5, 6, 7}
+    assert all(cyc == 10.0 for cyc in st.fault_channels.values())
+    # recovery landed on the surviving stack's channels
+    assert set(st.recover_bytes) == {0, 1, 2, 3}
+    assert sum(st.recover_bytes.values()) == \
+        rt.faults.counters["reupload_bytes"]
+
+
+def test_pinned_output_replays_onto_survivor_numeric():
+    plan = FaultPlan(stack_faults=(StackFault(at_cycle=5000.0, stack=1),))
+    rt = PIMRuntime(channels=4, stacks=2, faults=plan)
+    a, b = rand(2048, 64), rand(64, 8)
+    oh = rt.gemm(a, b, placement="row-striped", keep_output=True)[0]
+    assert {c for c, _ in oh.pending_d2h} == set(range(8))
+    rt.gemm(a, b, placement="row-striped", execute=False)   # fires fault
+    # undrained shards of the dead stack were replayed onto survivors
+    assert {c for c, _ in oh.pending_d2h} <= {0, 1, 2, 3}
+    assert rt.faults.counters["replayed_outputs"] == 4
+    assert rt.faults.counters["replay_cycles"] > 0
+    y = oh.to_host()
+    ref = a.astype(np.float32) @ b.astype(np.float32)
+    assert float(np.max(np.abs(np.asarray(y, np.float32) - ref))) < 0.05
+
+
+# ---------------------------------------------------------------------------
+# link perturbations: transient retries + degradation windows
+# ---------------------------------------------------------------------------
+
+
+def _flaky_run(seed=7):
+    plan = FaultPlan(seed=seed, link_transient=LinkTransient(prob=0.9))
+    rt = PIMRuntime(channels=4, stacks=2, faults=plan)
+    h = rt.place((2048, 256), placement="row-striped", other_dim=1)
+    rt.gemv(h, rand(256), placement="row-striped", execute=False)
+    rt.gemv(h, rand(256), placement="row-striped", execute=False)
+    return rt
+
+
+def test_link_transient_charges_retry_windows():
+    rt = _flaky_run()
+    # cross-stack reduction traffic crosses the flaky link -> retries
+    retries = [(k, n) for k, n in rt.stack.link.events if k == "retry"]
+    assert retries, "p=0.9 transient must produce retransmissions"
+    assert rt.faults.counters["link_retries"] == len(retries)
+    assert rt.faults.counters["retransmitted_bytes"] == \
+        sum(n for _, n in retries)
+
+
+def test_link_transient_same_seed_identical_ledgers():
+    ra, rb = _flaky_run(seed=7), _flaky_run(seed=7)
+    assert ra.stack.link == rb.stack.link
+    assert ra.faults.counters == rb.faults.counters
+    # a different seed draws a different retry pattern
+    rc = _flaky_run(seed=8)
+    assert (rc.stack.link.events != ra.stack.link.events
+            or rc.stack.link.cycles != ra.stack.link.cycles)
+
+
+def test_link_degradation_window_stretches_charges():
+    base = PIMRuntime(channels=4, stacks=2)
+    slow = PIMRuntime(channels=4, stacks=2, faults=FaultPlan(
+        link_degradations=(LinkDegradation(start_cycle=0.0,
+                                           end_cycle=1e12, factor=2.0),)))
+    for rt in (base, slow):
+        h = rt.place((2048, 256), placement="row-striped", other_dim=1)
+        rt.gemv(h, rand(256), placement="row-striped", execute=False)
+    assert slow.stack.link.cycles == 2 * base.stack.link.cycles
+    assert slow.stack.link.bytes == base.stack.link.bytes   # extra is time
+    assert any(k == "degrade" for k, _ in slow.stack.link.events)
+    assert slow.faults.counters["degraded_cycles"] == \
+        slow.stack.link.cycles - base.stack.link.cycles
+
+
+def test_link_degradation_outside_window_is_free():
+    rt = PIMRuntime(channels=4, stacks=2, faults=FaultPlan(
+        link_degradations=(LinkDegradation(start_cycle=1e11,
+                                           end_cycle=1e12, factor=4.0),)))
+    h = rt.place((2048, 256), placement="row-striped", other_dim=1)
+    rt.gemv(h, rand(256), placement="row-striped", execute=False)
+    assert not any(k == "degrade" for k, _ in rt.stack.link.events)
+
+
+# ---------------------------------------------------------------------------
+# plan DSL + coercion
+# ---------------------------------------------------------------------------
+
+
+def test_fault_plan_dsl_parses_every_clause():
+    plan = FaultPlan.parse("""
+        # a full scenario
+        kill channel 3 @ 1000
+        kill stack 1 @ 2e6
+        flaky link p=0.01 backoff=32 retries=4 cap=1024
+        slow link x2.5 @ 100:900
+        fail slot 0 @ iter 5
+    """, seed=42)
+    assert plan.seed == 42 and not plan.empty
+    assert plan.channel_faults == (ChannelFault(at_cycle=1000.0, channel=3),)
+    assert plan.stack_faults == (StackFault(at_cycle=2e6, stack=1),)
+    lt = plan.link_transient
+    assert (lt.prob, lt.backoff_cycles, lt.max_retries,
+            lt.backoff_cap_cycles) == (0.01, 32, 4, 1024)
+    d = plan.link_degradations[0]
+    assert (d.start_cycle, d.end_cycle, d.factor) == (100.0, 900.0, 2.5)
+    assert plan.serve_faults == (ServeFault(at_iter=5, slot=0),)
+
+
+def test_fault_plan_dsl_rejects_garbage():
+    with pytest.raises(ValueError):
+        FaultPlan.parse("explode everything @ 5")
+    with pytest.raises(ValueError):
+        FaultPlan.parse("flaky link p=0.5; flaky link p=0.6")
+
+
+def test_as_plan_coerces_and_rejects():
+    assert as_plan("kill ch 0 @ 1").channel_faults[0].channel == 0
+    p = FaultPlan()
+    assert as_plan(p) is p
+    with pytest.raises(TypeError):
+        as_plan(123)
+
+
+# ---------------------------------------------------------------------------
+# DecodeOffload: stack failover (numeric cross-check vs XLA FP32)
+# ---------------------------------------------------------------------------
+
+
+def _small_cfg():
+    return get("qwen3-1.7b").reduced()
+
+
+def test_decode_offload_stack_failover_numeric_serialized():
+    cfg = _small_cfg()
+    # kill the last layer block's home stack between step 1 and step 2
+    plan = FaultPlan(stack_faults=(StackFault(at_cycle=28529.0, stack=3),))
+    off = DecodeOffload(cfg, channels=4, stacks=4, numeric=True, faults=plan)
+    assert off.surviving_fraction == 1.0
+    r1 = off.step(2)
+    r2 = off.step(2)
+    r3 = off.step(2)
+    for rec in (r1, r2, r3):
+        assert rec.numeric and rec.numeric_max_err < off.atol
+        assert rec.logits_max_err < off.atol
+    inj = off.rt.faults
+    assert inj.counters["stack_failovers"] == 1
+    assert inj.counters["failover_migrated_bytes"] > 0
+    assert 3 not in off.stack_map          # dead stack remapped away
+    assert off.surviving_fraction == pytest.approx(0.75)
+    # the weight migration crossed the host link
+    assert any(k == "reupload" for k, _ in off.rt.stack.link.events)
+
+
+def test_decode_offload_stack_failover_numeric_async():
+    cfg = _small_cfg()
+    plan = FaultPlan(stack_faults=(StackFault(at_cycle=28529.0, stack=3),))
+    off = DecodeOffload(cfg, channels=4, stacks=4, numeric=True,
+                        async_mode=True, faults=plan)
+    for _ in range(3):
+        rec = off.step(2)
+        assert rec.numeric_max_err < off.atol
+    assert off.rt.faults.counters["stack_failovers"] == 1
+    assert 3 not in off.stack_map
+    assert off.surviving_fraction == pytest.approx(0.75)
+
+
+def test_decode_offload_unrecoverable_when_no_survivor():
+    cfg = _small_cfg()
+    # single stack: nothing to fail over to — the loss is total, whether
+    # it lands during weight upload or during a decode step
+    plan = FaultPlan(stack_faults=(StackFault(at_cycle=1.0, stack=0),))
+    with pytest.raises(NoHealthyChannelsError):
+        off = DecodeOffload(cfg, channels=2, stacks=1, faults=plan)
+        off.step(1)
+        off.step(1)
+
+
+# ---------------------------------------------------------------------------
+# Server: graceful degradation
+# ---------------------------------------------------------------------------
+
+
+def _server(**kw):
+    import jax
+
+    from repro.models import model as lm
+    from repro.serve.loop import Server
+
+    cfg = get("qwen3-1.7b").reduced().replace(n_layers=2, d_model=64,
+                                              d_ff=128, vocab_size=128)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    return Server(cfg, params, cache_len=48, **kw)
+
+
+def _req(uid, n=6, plen=4):
+    from repro.serve.loop import Request
+    return Request(uid=uid,
+                   prompt=RNG.integers(0, 127, plen).astype(np.int32),
+                   max_new=n)
+
+
+def test_server_rejects_overlong_prompt_at_submit():
+    srv = _server(slots=1)
+    with pytest.raises(ValueError, match="cache_len"):
+        srv.submit(_req(0, plen=48))
+    with pytest.raises(ValueError, match="cache_len"):
+        srv.submit(_req(1, plen=64))
+    srv.submit(_req(2, plen=47))           # boundary: one slot to decode
+    assert len(srv.run_until_drained()) == 1
+
+
+def test_server_slot_fault_requeues_with_backoff():
+    from repro.faults.plan import as_plan as _ap
+    srv = _server(slots=2, faults="fail slot 0 @ iter 2", max_retries=2)
+    for i in range(3):
+        srv.submit(_req(i))
+    done = srv.run_until_drained()
+    assert sorted(r.uid for r in done) == [0, 1, 2]
+    assert srv.retries_total == 1
+    knocked = [r for r in done if r.retries == 1]
+    assert len(knocked) == 1
+    # the knocked-out request restarted from its prompt after backoff
+    assert len(knocked[0].out_tokens) == 6
+
+
+def test_server_fails_request_past_max_retries():
+    srv = _server(slots=1, max_retries=1, retry_backoff_steps=1,
+                  faults=FaultPlan(serve_faults=(
+                      ServeFault(at_iter=2, slot=0),
+                      ServeFault(at_iter=8, slot=0))))
+    srv.submit(_req(7, n=8))
+    done = srv.run_until_drained()
+    assert done == [] and [r.uid for r in srv.failed_requests] == [7]
+    assert srv.latency_summary()["failed"] == 1
+
+
+def test_server_admission_control_sheds_over_cap():
+    from repro.serve.loop import AdmissionError
+    srv = _server(slots=1, max_queue=2)
+    srv.submit(_req(0))
+    srv.submit(_req(1))
+    with pytest.raises(AdmissionError):
+        srv.submit(_req(2))
+    assert srv.shed == 1
+    assert len(srv.run_until_drained()) == 2
+    assert srv.latency_summary()["shed"] == 1
+
+
+def test_server_admission_cap_scales_with_surviving_capacity():
+    class _Half:
+        surviving_fraction = 0.5
+    srv = _server(slots=1, max_queue=4)
+    srv.pim_offload = _Half()              # duck-typed sidecar stand-in
+    from repro.serve.loop import AdmissionError
+    srv.submit(_req(0))
+    srv.submit(_req(1))
+    with pytest.raises(AdmissionError):    # cap 4 * 0.5 = 2
+        srv.submit(_req(2))
+    srv.pim_offload = None
+
+
+def test_server_run_until_drained_raises_on_undrained():
+    srv = _server(slots=1)
+    srv.submit(_req(0, n=40))
+    with pytest.raises(RuntimeError, match="max_iters"):
+        srv.run_until_drained(max_iters=3)
+    assert srv.undrained == 1
+
+
+def test_server_run_until_drained_warns_on_undrained():
+    srv = _server(slots=1)
+    srv.submit(_req(0, n=40))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        out = srv.run_until_drained(max_iters=3, on_undrained="warn")
+    assert len(w) == 1 and issubclass(w[0].category, RuntimeWarning)
+    assert out == [] and srv.latency_summary()["undrained"] == 1
+    with pytest.raises(ValueError):
+        srv.run_until_drained(on_undrained="ignore")
+
+
+def test_server_step_deadline_counts_misses():
+    srv = _server(slots=1, step_deadline_s=0.0)
+    srv.submit(_req(0, n=3))
+    srv.run_until_drained()
+    assert srv.deadline_misses > 0
+    assert srv.latency_summary()["deadline_misses"] == srv.deadline_misses
+
+
+# ---------------------------------------------------------------------------
+# observability surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_fault_counters_mirror_into_metrics_registry():
+    from repro.obs.metrics import MetricsRegistry
+    m = MetricsRegistry()
+    plan = FaultPlan(stack_faults=(StackFault(at_cycle=10.0, stack=1),))
+    rt = PIMRuntime(channels=4, stacks=2, metrics=m, faults=plan)
+    h = rt.place((2048, 128), placement="row-striped", other_dim=1)
+    rt.gemv(h, rand(128), placement="row-striped", execute=False)
+    rt.gemv(h, rand(128), placement="row-striped", execute=False)
+    assert m.get("faults.channel_failures").value == 4
+    assert m.get("faults.reupload_bytes").value == \
+        rt.faults.counters["reupload_bytes"]
+
+
+def test_chrome_trace_emits_fault_instants():
+    import json
+
+    from repro.obs.profile import chrome_trace
+    plan = FaultPlan(stack_faults=(StackFault(at_cycle=10.0, stack=1),))
+    rt = PIMRuntime(channels=4, stacks=2, faults=plan, profile=True)
+    h = rt.place((2048, 128), placement="row-striped", other_dim=1)
+    rt.gemv(h, rand(128), placement="row-striped", execute=False)
+    rt.gemv(h, rand(128), placement="row-striped", execute=False)
+    trace = chrome_trace(rt)
+    json.dumps(trace)                      # must stay serializable
+    inst = [e for e in trace["traceEvents"]
+            if e.get("ph") == "i" and e.get("cat") == "fault"]
+    kinds = {e["args"]["kind"] for e in inst}
+    assert "fault" in kinds and "recover" in kinds
+    assert all(e["s"] == "g" for e in inst)
+
+
+def test_injector_summary_reports_failed_channels():
+    plan = FaultPlan(channel_faults=(ChannelFault(at_cycle=0.0, channel=0),))
+    rt = PIMRuntime(channels=4, faults=plan)
+    rt.gemm(rand(512, 64), rand(64, 16), placement="row-striped")
+    s = rt.faults.summary()
+    assert s["failed_channels"] == 1
+    assert s["channel_failures"] == 1

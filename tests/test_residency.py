@@ -407,3 +407,49 @@ def test_decode_offload_moe_counts_active_experts():
     assert mms["moe.expert.wi"].count \
         == n_moe * (moe.top_k + moe.n_shared)
     assert mms["moe.router"].count == n_moe
+
+
+# ---------------------------------------------------------------------------
+# capacity eviction edge cases (PIMDevice.add_resident / drop_resident)
+# ---------------------------------------------------------------------------
+
+
+def test_doomed_insert_refused_when_only_pinned_could_free_enough():
+    from repro.runtime.device import PIMDevice
+    dev = PIMDevice(0, capacity_bytes=1024)
+    # 768 B pinned (an undrained kept output) + 128 B evictable
+    assert dev.add_resident(1, (0, 12, 0, 32), pin=True)    # 768 B
+    assert dev.add_resident(2, (0, 2, 0, 32))               # 128 B
+    # a 512 B insert needs 384 B freed but only 128 B is evictable:
+    # the insert must be refused WITHOUT evicting uid 2
+    assert not dev.add_resident(3, (0, 8, 0, 32))           # 512 B
+    assert sorted(dev.resident) == [1, 2]
+    assert dev.spill_bytes == 0
+    assert not any(k == "spill" for k, _ in dev.events)
+    # uid 2 is still usable (was not collateral damage)
+    assert dev.has_resident(2, (0, 2, 0, 32))
+
+
+def test_drop_resident_of_pinned_uid_unpins_it():
+    from repro.runtime.device import PIMDevice
+    dev = PIMDevice(0, capacity_bytes=1024)
+    assert dev.add_resident(1, (0, 4, 0, 32), pin=True)
+    assert 1 in dev.pinned
+    dev.drop_resident(1)
+    assert 1 not in dev.resident and 1 not in dev.pinned
+    # the slot is genuinely free again: a capacity-filling insert works
+    assert dev.add_resident(2, (0, 16, 0, 32))              # 1024 B
+
+
+def test_incoming_uid_self_eviction_counts_spill():
+    from repro.runtime.device import PIMDevice
+    dev = PIMDevice(0, capacity_bytes=1024)
+    assert dev.add_resident(1, (0, 12, 0, 32))              # 768 B
+    # same uid streams a second 768 B box: its own older box is the only
+    # candidate (last resort) and must be charged as spill
+    assert dev.add_resident(1, (12, 24, 0, 32))
+    assert dev.spill_bytes == 768
+    assert [e for e in dev.events if e[0] == "spill"] == [("spill", 768)]
+    assert dev.resident_bytes == 768
+    assert dev.has_resident(1, (12, 24, 0, 32))
+    assert not dev.has_resident(1, (0, 12, 0, 32))

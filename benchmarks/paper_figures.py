@@ -38,6 +38,11 @@ cost model + the functional PIM engine.
             empty-FaultPlan overhead (< 5%, ledgers/traces exactly
             equal), and flaky-link seed determinism; gates feed
             ``results/BENCH_runtime.json`` (CI ``bench-faults``)
+  kv      — KV-cache-resident attention decode: paged-resident vs
+            streamed attention step at 8k context (>= 4x), steady-state
+            per-step h2d flat in context length (new-token bytes only),
+            and paged-eviction seed determinism; gates feed
+            ``results/BENCH_runtime.json`` (CI ``bench-kv``)
 
 Each returns rows of (name, us_per_call, derived) where us_per_call is the
 measured host execution time of the functional engine (small tiles; the
@@ -338,6 +343,12 @@ LAST_OBS_METRICS: dict = {}
 #: ``bench-faults`` gates the degradation curve, empty-plan overhead,
 #: and seed determinism)
 LAST_FAULTS_METRICS: dict = {}
+
+#: measured KV-cache metrics of the last ``kv`` section run — merged
+#: into ``results/BENCH_runtime.json`` the same way (CI ``bench-kv``
+#: gates the paged-vs-streamed attention speedup, context-independent
+#: per-step h2d, and eviction determinism)
+LAST_KV_METRICS: dict = {}
 
 
 def cluster_sweep() -> List[Row]:
@@ -840,6 +851,116 @@ def faults_sweep() -> List[Row]:
     return rows
 
 
+def kv_sweep() -> List[Row]:
+    """KV-cache-resident attention decode gates (CI ``bench-kv``).
+
+    * **paged vs streamed at 8k context** — one attention step (score
+      GEMV + softmax epilogue + context GEMV) against an 8192-token
+      resident paged KV must beat the same step with the K/V shipped
+      across the host link every step (row-striped host arrays) by
+      >= 4x; measured ~10x, the gap is pure link traffic;
+    * **per-step h2d flat in context** — a full analytic decode step
+      against a 640-token and a 1280-token context must charge exactly
+      the same host->PIM bytes (new-token activations + q + the new
+      token's K/V only; the resident prefix is never re-shipped);
+    * **eviction determinism** — two fresh numeric runs under the same
+      capacity budget produce ``==``-equal KV summaries, per-channel
+      h2d ledgers, and per-step h2d.
+    """
+    rows: List[Row] = []
+    from repro.configs import get
+    from repro.runtime import KVCacheManager
+    from repro.serve.offload import DecodeOffload
+
+    # -- paged-resident vs streamed attention step at 8k context --------
+    ctx, hd, group, nchan = 8192, 64, 4, 16
+    rt = PIMRuntime(channels=nchan)
+    kv = KVCacheManager(rt, n_layers=1, n_kv_heads=1, head_dim=hd,
+                        channels_for_layer=lambda ell: range(nchan))
+    kv.request("r")
+    kv.append_tokens("r", 0, ctx)
+    q = np.zeros((hd, group), np.float16)
+
+    def paged_step() -> float:
+        K, VT = kv.tensors("r", 0, 0)
+        scores, r1 = rt.gemm(K, q, placement="paged", keep_output=True,
+                             execute=False)
+        _, r2 = rt.softmax(scores, placement="paged", execute=False)
+        _, r3 = rt.gemm(VT, scores, placement="paged", execute=False)
+        scores.evict()
+        return (r1.makespan_cycles + r2.makespan_cycles
+                + r3.makespan_cycles)
+
+    rt_str = PIMRuntime(channels=nchan)
+    k_host = np.zeros((ctx, hd), np.float16)
+    vt_host = np.zeros((hd, ctx), np.float16)
+    s_host = np.zeros((ctx, group), np.float16)
+
+    def streamed_step() -> float:
+        _, r1 = rt_str.gemm(k_host, q, placement="row-striped",
+                            execute=False)
+        _, r2 = rt_str.gemm(vt_host, s_host, placement="row-striped",
+                            execute=False)
+        return r1.makespan_cycles + r2.makespan_cycles
+
+    paged_cyc = [paged_step() for _ in range(3)]
+    streamed_cyc = [streamed_step() for _ in range(3)]
+    assert len(set(paged_cyc)) == 1 and len(set(streamed_cyc)) == 1
+    speedup = streamed_cyc[0] / paged_cyc[0]
+    assert speedup >= 4.0, (streamed_cyc[0], paged_cyc[0], speedup)
+    rows.append(("kv/paged_vs_streamed_8k", 0.0,
+                 f"paged={paged_cyc[0]:.0f}cyc "
+                 f"streamed={streamed_cyc[0]:.0f}cyc "
+                 f"speedup={speedup:.2f}x (gate >= 4x)"))
+    LAST_KV_METRICS.update(paged_step_cycles=paged_cyc[0],
+                           streamed_step_cycles=streamed_cyc[0],
+                           paged_speedup_8k=speedup)
+
+    # -- steady per-step h2d independent of context length --------------
+    cfg = get("qwen3-1.7b").reduced()
+
+    def steady_h2d(prefill: int) -> int:
+        off = DecodeOffload(cfg, channels=4, kv_offload=True)
+        off.kv_prefill(0, prefill)
+        recs = [off.step(1, request_ids=[0]) for _ in range(3)]
+        steady = {r.h2d_bytes for r in recs[1:]}
+        assert len(steady) == 1, steady
+        return steady.pop()
+
+    h2d_short, h2d_long = steady_h2d(640), steady_h2d(1280)
+    assert h2d_short == h2d_long, (h2d_short, h2d_long)
+    rows.append(("kv/steady_h2d_flat", 0.0,
+                 f"ctx=640:{h2d_short}B ctx=1280:{h2d_long}B "
+                 f"(gate ==; resident prefix never re-shipped)"))
+    LAST_KV_METRICS.update(steady_step_h2d_bytes=float(h2d_short),
+                           h2d_flat=float(h2d_short == h2d_long))
+
+    # -- eviction determinism under a fixed seed ------------------------
+    def evict_run():
+        off = DecodeOffload(cfg, channels=4, numeric=True,
+                            kv_offload=True, kv_capacity_bytes=200_000)
+        for rid in ("a", "b"):
+            off.kv_prefill(rid, 260)
+        for _ in range(3):
+            off.step(2, request_ids=["a", "b"])
+        return (off.kv.summary(),
+                [d.xfer.h2d_bytes for d in off.rt.stack],
+                [s.h2d_bytes for s in off.steps])
+
+    ea, eb = evict_run(), evict_run()
+    deterministic = ea == eb
+    assert deterministic, "paged eviction diverged across seeded runs"
+    evictions = int(ea[0]["evictions"])
+    assert evictions > 0, "200KB budget produced no evictions"
+    rows.append(("kv/eviction_determinism", 0.0,
+                 f"evictions={evictions} "
+                 f"evict_bytes={ea[0]['evict_bytes']} "
+                 f"restore_bytes={ea[0]['restore_bytes']} identical=True"))
+    LAST_KV_METRICS.update(evict_deterministic=float(deterministic),
+                           evictions=float(evictions))
+    return rows
+
+
 ALL = {
     "fig7": fig7_pep_cycles,
     "fig8": fig8_ame_instructions,
@@ -852,4 +973,5 @@ ALL = {
     "decode": decode_async_sweep,
     "obs": obs_sweep,
     "faults": faults_sweep,
+    "kv": kv_sweep,
 }

@@ -101,6 +101,11 @@ def _summarize_trace(text: str) -> str:
         lines.append(f"  async markers: {len(st.op_starts)} TSTART / "
                      f"{len(st.op_ends)} TEND over "
                      f"{len({op for _, op in st.op_starts})} ops")
+    if st.kvappend_bytes or st.kvevict_bytes:
+        lines.append(
+            f"  kv markers: append_bytes={sum(st.kvappend_bytes.values())} "
+            f"evict_bytes={sum(st.kvevict_bytes.values())} over "
+            f"{len(set(st.kvappend_bytes) | set(st.kvevict_bytes))} channels")
     return "\n".join(lines)
 
 

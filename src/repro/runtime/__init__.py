@@ -41,6 +41,7 @@ from repro.runtime.device import (
     TRANSFER_BYTES_PER_COMMAND,
     transfer_cycles,
 )
+from repro.runtime.kvcache import KVCacheManager
 from repro.runtime.placement import (
     PLACEMENTS,
     Shard,
@@ -49,6 +50,7 @@ from repro.runtime.placement import (
     box_contains,
     cluster_shards,
     get_placement,
+    paged,
     placement_shards,
     row_striped,
     shard_mac_passes,
@@ -56,7 +58,13 @@ from repro.runtime.placement import (
     subset_shards,
     validate_cover,
 )
-from repro.runtime.residency import BYTES_PER_ELEM, DeviceTensor, box_bytes
+from repro.runtime.residency import (
+    BYTES_PER_ELEM,
+    KV_BLOCK_TOKENS,
+    DeviceTensor,
+    PagedTensor,
+    box_bytes,
+)
 from repro.runtime.scheduler import (
     ENGINE_MODES,
     ChannelReport,
@@ -80,10 +88,11 @@ __all__ = [
     "CHANNEL_BANDWIDTH_BYTES_PER_S", "PIMDevice", "PIMStack",
     "TRANSFER_BYTES_PER_COMMAND", "transfer_cycles",
     "PLACEMENTS", "Shard", "balanced", "block_2d", "box_contains",
-    "cluster_shards", "get_placement", "placement_shards", "row_striped",
-    "shard_mac_passes", "stack_restricted_shards", "subset_shards",
-    "validate_cover",
-    "BYTES_PER_ELEM", "DeviceTensor", "box_bytes",
+    "cluster_shards", "get_placement", "paged", "placement_shards",
+    "row_striped", "shard_mac_passes", "stack_restricted_shards",
+    "subset_shards", "validate_cover",
+    "BYTES_PER_ELEM", "KV_BLOCK_TOKENS", "DeviceTensor", "PagedTensor",
+    "box_bytes", "KVCacheManager",
     "ENGINE_MODES", "ChannelReport", "PIMRuntime", "RuntimeReport",
     "pim_gemm", "pim_gemv",
     "OpHandle", "Timeline",

@@ -215,7 +215,18 @@ class PIMDevice:
         is not recorded at all (streamed through, re-shipped next use).
         ``pin=True`` additionally pins ``uid`` (kept outputs awaiting
         their deferred d2h).  Returns whether the box is now resident.
+
+        A box that *contains* already-resident boxes of the same tensor
+        supersedes them (they are absorbed rather than double-counted) —
+        the growing-trailing-page case of a :class:`~repro.runtime.
+        residency.PagedTensor`, where each re-mark extends the previous
+        page box by the newly appended tokens.
         """
+        boxes = self.resident.get(uid)
+        if boxes:
+            kept_boxes = [b for b in boxes if not box_contains(box, b)]
+            if len(kept_boxes) != len(boxes):
+                self.resident[uid] = kept_boxes
         nbytes = box_bytes(box)
         cap = self.capacity_bytes
         if cap is not None:
@@ -268,6 +279,25 @@ class PIMDevice:
         """Forget all of tensor ``uid``'s regions (eviction, no traffic)."""
         self.resident.pop(uid, None)
         self.pinned.discard(uid)
+
+    def drop_resident_box(self, uid: int,
+                          box: Tuple[int, int, int, int]) -> int:
+        """Forget the resident regions of ``uid`` contained in ``box``
+        (paged KV eviction: one page, not the whole tensor).  Returns the
+        bytes dropped; no spill/traffic accounting — the KV manager
+        charges its own eviction markers and the eventual re-ship.
+        """
+        boxes = self.resident.get(uid)
+        if not boxes:
+            return 0
+        kept = [b for b in boxes if not box_contains(box, b)]
+        dropped = (sum(box_bytes(b) for b in boxes)
+                   - sum(box_bytes(b) for b in kept))
+        if kept:
+            self.resident[uid] = kept
+        else:
+            self.resident.pop(uid)
+        return dropped
 
     def resident_bytes_of(self, uid: int) -> int:
         """Bytes of tensor ``uid`` resident on this channel."""

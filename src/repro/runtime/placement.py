@@ -218,10 +218,41 @@ def balanced(m: int, k: int, n: int, channels: int) -> List[Shard]:
     return shards
 
 
+def paged(m: int, k: int, n: int, channels: int) -> List[Shard]:
+    """Block-cyclic placement for *growing* operands (the KV cache).
+
+    ``row-striped``/``balanced`` re-balance the whole operand whenever M
+    (or K) grows past a block boundary, so the block->channel assignment
+    of the *prefix* moves and every decode step re-ships context that is
+    already resident.  ``paged`` fixes each 128-sized block to a channel
+    by index — growth appends new blocks without touching old ones, so
+    resident prefix boxes hit forever:
+
+    * M > ROWNUM: one shard per 128-row block, ``channel = block % C``,
+      full K and N (a K cache ``(ctx, head_dim)`` growing along rows).
+    * M <= ROWNUM: 128-column K groups (AAM-aligned; 128 % AAM_BLOCKS
+      == 0), ``channel = group % C`` (a transposed V cache
+      ``(head_dim, ctx)`` growing along columns); the K-split partials
+      are host-reduced by the scheduler like ``balanced``'s.
+
+    The two cases compose: the score GEMV's output row block *b* and the
+    context GEMV's K group *b* land on the same channel, so a kept score
+    output is consumed in place by the context op with zero traffic.
+    """
+    blocks = _row_blocks(m)
+    if len(blocks) > 1:
+        return [Shard(i % channels, blk.start, blk.stop, 0, k, 0, n)
+                for i, blk in enumerate(blocks)]
+    kgroups = [range(k0, min(k0 + ROWNUM, k)) for k0 in range(0, k, ROWNUM)]
+    return [Shard(g % channels, 0, m, grp.start, grp.stop, 0, n)
+            for g, grp in enumerate(kgroups)]
+
+
 PLACEMENTS: Dict[str, Callable[[int, int, int, int], List[Shard]]] = {
     "row-striped": row_striped,
     "2d-block": block_2d,
     "balanced": balanced,
+    "paged": paged,
 }
 
 
@@ -233,7 +264,6 @@ def get_placement(name: str) -> Callable[[int, int, int, int], List[Shard]]:
                        f"available: {sorted(PLACEMENTS)}") from None
 
 
-@functools.lru_cache(maxsize=4096)
 def placement_shards(policy: str, m: int, k: int, n: int,
                      channels: int) -> Tuple[Shard, ...]:
     """Memoized, cover-validated shard decomposition.
@@ -243,13 +273,28 @@ def placement_shards(policy: str, m: int, k: int, n: int,
     every step — so the scheduler resolves shards through this cache.
     Returns an immutable tuple (callers must not mutate shard lists), with
     :func:`validate_cover` run once per distinct key instead of per op.
+
+    ``paged`` operands *grow*: a KV cache whose M (or K) dimension changes
+    every decode step would mint a fresh cache entry per step and a
+    32k-token decode would pin thousands of dead decompositions.  Paged
+    decompositions therefore bypass memoization entirely (they are cheap
+    — one shard per block, constructively disjoint, so no O(shards^2)
+    cover validation either) and the lru_cache only ever holds
+    fixed-shape keys.
     """
+    if policy == "paged":
+        return tuple(paged(m, k, n, channels))
+    return _placement_shards_cached(policy, m, k, n, channels)
+
+
+@functools.lru_cache(maxsize=4096)
+def _placement_shards_cached(policy: str, m: int, k: int, n: int,
+                             channels: int) -> Tuple[Shard, ...]:
     shards = tuple(get_placement(policy)(m, k, n, channels))
     validate_cover(list(shards), m, k, n)
     return shards
 
 
-@functools.lru_cache(maxsize=4096)
 def cluster_shards(policy: str, m: int, k: int, n: int, stacks: int,
                    channels_per_stack: int) -> Tuple[Shard, ...]:
     """Memoized ``(stack, channel)`` decomposition across a cluster.
@@ -261,26 +306,53 @@ def cluster_shards(policy: str, m: int, k: int, n: int, stacks: int,
     axis: contiguous channel runs map to contiguous stacks.  Which boxes
     land with channels of *different* stacks is exactly what the
     scheduler's host-link ledger charges.
+
+    Like :func:`placement_shards`, ``paged`` keys (growing KV shapes)
+    bypass the lru_cache.
     """
+    if policy == "paged":
+        return _cluster_shards_impl(policy, m, k, n, stacks,
+                                    channels_per_stack)
+    return _cluster_shards_cached(policy, m, k, n, stacks,
+                                  channels_per_stack)
+
+
+def _cluster_shards_impl(policy: str, m: int, k: int, n: int, stacks: int,
+                         channels_per_stack: int) -> Tuple[Shard, ...]:
     flat = placement_shards(policy, m, k, n, stacks * channels_per_stack)
     return tuple(dataclasses.replace(
         s, stack=s.channel // channels_per_stack,
         channel=s.channel % channels_per_stack) for s in flat)
 
 
-@functools.lru_cache(maxsize=4096)
+_cluster_shards_cached = functools.lru_cache(maxsize=4096)(
+    _cluster_shards_impl)
+
+
 def stack_restricted_shards(policy: str, m: int, k: int, n: int,
                             stack: int,
                             channels_per_stack: int) -> Tuple[Shard, ...]:
     """Memoized decomposition of one op onto a *single* stack of a
     cluster (the decode-offload regime: each layer's weights live on
     their home stack, re-decomposed every step).  Channel ids are local
-    to ``stack``."""
+    to ``stack``.  ``paged`` keys bypass the lru_cache."""
+    if policy == "paged":
+        return _stack_restricted_impl(policy, m, k, n, stack,
+                                      channels_per_stack)
+    return _stack_restricted_cached(policy, m, k, n, stack,
+                                    channels_per_stack)
+
+
+def _stack_restricted_impl(policy: str, m: int, k: int, n: int, stack: int,
+                           channels_per_stack: int) -> Tuple[Shard, ...]:
     flat = placement_shards(policy, m, k, n, channels_per_stack)
     return tuple(dataclasses.replace(s, stack=stack) for s in flat)
 
 
-@functools.lru_cache(maxsize=4096)
+_stack_restricted_cached = functools.lru_cache(maxsize=4096)(
+    _stack_restricted_impl)
+
+
 def subset_shards(policy: str, m: int, k: int, n: int,
                   flat_channels: Tuple[int, ...],
                   channels_per_stack: int) -> Tuple[Shard, ...]:
@@ -294,7 +366,19 @@ def subset_shards(policy: str, m: int, k: int, n: int,
     its flat id (then splits into ``(stack, channel)``).  The same
     subset used for ``place`` and the consuming ops yields identical
     shard geometry, so residency hits exactly as on full-width ops.
+
+    ``paged`` keys (growing KV shapes) bypass the lru_cache.
     """
+    if policy == "paged":
+        return _subset_shards_impl(policy, m, k, n, flat_channels,
+                                   channels_per_stack)
+    return _subset_shards_cached(policy, m, k, n, flat_channels,
+                                 channels_per_stack)
+
+
+def _subset_shards_impl(policy: str, m: int, k: int, n: int,
+                        flat_channels: Tuple[int, ...],
+                        channels_per_stack: int) -> Tuple[Shard, ...]:
     if len(set(flat_channels)) != len(flat_channels):
         raise ValueError(f"duplicate channel ids in subset {flat_channels}")
     flat = placement_shards(policy, m, k, n, len(flat_channels))
@@ -304,3 +388,7 @@ def subset_shards(policy: str, m: int, k: int, n: int,
         out.append(dataclasses.replace(
             s, stack=f // channels_per_stack, channel=f % channels_per_stack))
     return tuple(out)
+
+
+_subset_shards_cached = functools.lru_cache(maxsize=4096)(
+    _subset_shards_impl)

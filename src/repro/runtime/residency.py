@@ -38,11 +38,19 @@ from typing import List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.isa import ROWNUM
 from repro.runtime.device import BYTES_PER_ELEM, PIMStack, box_bytes
 
 Box = Tuple[int, int, int, int]
 
 _uid = itertools.count(1)
+
+#: Tokens per KV page.  Equal to ROWNUM so one K-cache page is exactly one
+#: 128-row placement block (and one transposed-V page one 128-column K
+#: group) under the ``paged`` placement policy — page boxes and shard
+#: operand boxes coincide, which is what makes the residency containment
+#: check hit without geometry translation.
+KV_BLOCK_TOKENS = ROWNUM
 
 
 class DeviceTensor:
@@ -137,3 +145,96 @@ class DeviceTensor:
         mode = "analytic" if self.values is None else "numeric"
         return (f"DeviceTensor(uid={self.uid}, shape={self.shape}, "
                 f"{mode}, resident_bytes={self.resident_bytes})")
+
+
+class PagedTensor(DeviceTensor):
+    """A :class:`DeviceTensor` that *grows* along one axis in fixed
+    :data:`KV_BLOCK_TOKENS`-sized pages — the KV-cache operand shape.
+
+    A K cache is ``(tokens, head_dim)`` growing along axis 0; a V cache
+    is stored transposed ``(head_dim, tokens)`` growing along axis 1 so
+    the context GEMV ``probs @ V`` runs as ``V^T``-resident K-split
+    shards.  Either way the *fixed* axis must fit one placement block
+    (``head_dim <= ROWNUM``) so each page's box coincides with exactly
+    one ``paged``-placement shard operand box.
+
+    Growth is an *append*, never a re-layout: page ``i`` keeps its box
+    and (under ``paged`` placement) its channel forever, so the resident
+    prefix is never re-shipped.  Only the trailing partial page's box
+    changes as it fills; re-marking it resident supersedes the old
+    contained box (see ``PIMDevice.add_resident``).  The host mirror is
+    kept in a capacity buffer grown page-at-a-time, with ``values``
+    exposed as the logical-extent view.
+    """
+
+    def __init__(self, stack: PIMStack, fixed: int, grow_axis: int = 0,
+                 numeric: bool = False):
+        if grow_axis not in (0, 1):
+            raise ValueError(f"grow_axis must be 0 or 1, got {grow_axis}")
+        if not 1 <= fixed <= ROWNUM:
+            raise ValueError(
+                f"fixed dim {fixed} must be in [1, {ROWNUM}] so a page "
+                f"spans exactly one placement block")
+        shape = (0, fixed) if grow_axis == 0 else (fixed, 0)
+        super().__init__(stack, shape, values=None)
+        self.grow_axis = grow_axis
+        self.fixed = fixed
+        self.numeric = numeric
+        self.tokens = 0
+        self._buf: Optional[np.ndarray] = None   # capacity >= tokens
+
+    @property
+    def num_blocks(self) -> int:
+        return -(-self.tokens // KV_BLOCK_TOKENS)
+
+    def block_box(self, idx: int) -> Box:
+        """Operand-coordinate box of page ``idx`` at the current extent
+        (the trailing page's box grows until the page fills)."""
+        lo = idx * KV_BLOCK_TOKENS
+        hi = min(lo + KV_BLOCK_TOKENS, self.tokens)
+        assert lo < hi, f"page {idx} empty at {self.tokens} tokens"
+        if self.grow_axis == 0:
+            return (lo, hi, 0, self.fixed)
+        return (0, self.fixed, lo, hi)
+
+    def append(self, count: int,
+               values: Optional[np.ndarray] = None) -> int:
+        """Grow the logical extent by ``count`` tokens and return the
+        index of the first page touched by the new entries.  ``values``
+        (``(count, fixed)`` or ``(fixed, count)`` matching ``grow_axis``)
+        fills the numeric mirror; accounting (h2d of the new entries,
+        residency re-mark) is the KV manager's job, not this handle's.
+        """
+        if count <= 0:
+            raise ValueError(f"append count must be positive, got {count}")
+        first_block = self.tokens // KV_BLOCK_TOKENS
+        lo, self.tokens = self.tokens, self.tokens + count
+        if self.numeric:
+            cap = -(-self.tokens // KV_BLOCK_TOKENS) * KV_BLOCK_TOKENS
+            full = ((cap, self.fixed) if self.grow_axis == 0
+                    else (self.fixed, cap))
+            if self._buf is None or self._buf.shape[self.grow_axis] < cap:
+                buf = np.zeros(full, np.float16)
+                if self._buf is not None:
+                    if self.grow_axis == 0:
+                        buf[:lo] = self._buf[:lo]
+                    else:
+                        buf[:, :lo] = self._buf[:, :lo]
+                self._buf = buf
+            if values is not None:
+                new = np.asarray(values, np.float16)
+                if self.grow_axis == 0:
+                    self._buf[lo:self.tokens] = new
+                else:
+                    self._buf[:, lo:self.tokens] = new
+            self.values = (self._buf[:self.tokens] if self.grow_axis == 0
+                           else self._buf[:, :self.tokens])
+        self.shape = ((self.tokens, self.fixed) if self.grow_axis == 0
+                      else (self.fixed, self.tokens))
+        return first_block
+
+    def __repr__(self) -> str:
+        mode = "numeric" if self.numeric else "analytic"
+        return (f"PagedTensor(uid={self.uid}, shape={self.shape}, "
+                f"axis={self.grow_axis}, blocks={self.num_blocks}, {mode}, "
+                f"resident_bytes={self.resident_bytes})")

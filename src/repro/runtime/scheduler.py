@@ -1040,6 +1040,87 @@ class PIMRuntime:
                 report.host_link_cycles, report=report)
         return result, report
 
+    def softmax(self, a: DeviceTensor, *,
+                placement: str = "paged",
+                execute: bool = True,
+                stack: Optional[int] = None,
+                channels: Optional[Sequence[int]] = None,
+                after: Optional[Sequence[OpHandle]] = None
+                ) -> Union[Tuple[DeviceTensor, RuntimeReport], OpHandle]:
+        """Column softmax (axis 0), *in place* on a resident handle — the
+        attention epilogue between the score and context GEMVs.
+
+        Cost model: exactly two mul-class elementwise passes per shard
+        (the exponentiation pass, then the normalize multiply; the
+        cross-page max/sum reduction rides the paper's in-memory
+        accumulation dataflow and is folded into the second pass) and
+        **zero transfers** — the operand is expected resident (the kept
+        score output; a miss ships it in honestly and marks it) and the
+        result overwrites the same resident boxes, so the probabilities
+        are consumed on-device by the context GEMV without ever touching
+        the host.  Numerics: FP32 softmax written back to the handle's
+        FP16 host mirror (cross-checked by DecodeOffload numeric mode).
+        """
+        if not isinstance(a, DeviceTensor):
+            raise TypeError(
+                "softmax operates in place on a DeviceTensor handle "
+                "(keep_output=True score GEMM result); got "
+                f"{type(a).__name__}")
+        m, c = a.shape
+        assert not execute or a.values is not None, \
+            "analytic (shape-only) DeviceTensor requires execute=False"
+        if self.faults is not None:
+            stack, channels = self.faults.on_op(stack, channels)
+        shards = self._shards(placement, m, c, 1, stack, channels)
+
+        op_devs = self._op_devices(stack, channels)
+        marks = {d.channel_id: len(d.events) for d in op_devs}
+        before = {d.channel_id: d.snapshot() for d in op_devs}
+        link_before = self._link_before()
+        lead_in: Dict[int, int] = {}
+        shipped: Dict[int, Set] = {}
+        link_seen: Optional[Dict] = {} if self._cluster else None
+        for s in shards:
+            flat = self._flat(s)
+            dev = self.stack[flat]
+            a_ships = self._ship_in(dev, a, s.a_box, shipped, "A",
+                                    link_seen)
+            if flat not in lead_in:
+                i0, i1, c0, c1 = next(ew_tiles(s.rows, s.ks))
+                lead_in[flat] = transfer_cycles(
+                    (i1 - i0) * (c1 - c0) * int(a_ships) * BYTES_PER_ELEM)
+            for _ in range(2):
+                agg = cost_mod.ew_shard_cost("mul", s.rows, s.ks)
+                dev.charge_analytic(agg.cycles, agg.flops, agg.commands)
+                dev.events.append(("instr", ShardSpan("mul", s.rows, s.ks)))
+            # in place: result stays resident on the same boxes, no d2h
+
+        if execute:
+            vals = a.resolve().astype(np.float32)
+            e = np.exp(vals - vals.max(axis=0, keepdims=True))
+            a.values[...] = (e / e.sum(axis=0, keepdims=True)).astype(F16)
+
+        report = self._finish("softmax", (m, c), placement, before,
+                              lead_in, link_before=link_before,
+                              devices=op_devs)
+        if self.metrics is not None:
+            self._note_op(report)
+        if self.faults is not None:
+            self._fault_epilogue(report, None)
+        if self.timeline is not None:
+            return self._submit_async(
+                "softmax",
+                {cr.channel: cr.busy_cycles for cr in report.per_channel},
+                report.host_link_cycles, marks,
+                reads=(a.uid,), writes=(a.uid,),
+                after=after, report=report, result=a)
+        if self.profile is not None:
+            self.profile.on_op(
+                "softmax",
+                {cr.channel: cr.busy_cycles for cr in report.per_channel},
+                report.host_link_cycles, report=report)
+        return a, report
+
 
 # ---------------------------------------------------------------------------
 # Convenience entry points (the end-to-end PIM-mode API)

@@ -122,7 +122,11 @@ HEADER = """\
 # BANK 2a = even-bank block a, BANK 2a+1 = odd-bank block a
 # JUMP/EXIT are zero-command (predecoded) and do not appear.
 # "# RESIDENT [channel] [bytes]" marks an operand shard reused in place
-# (zero bus transactions); comment-shaped so external replay ignores it."""
+# (zero bus transactions); comment-shaped so external replay ignores it.
+# "# KVAPPEND [channel] [bytes]" / "# KVEVICT [channel] [bytes]" mark
+# paged-KV-cache page writes/evictions the same way (the append's real
+# traffic is the adjacent MEM writes; the evict charges nothing now —
+# the re-ship is real MEM traffic when the page is next needed)."""
 
 
 # ---------------------------------------------------------------------------
@@ -238,6 +242,16 @@ def _emit_device(lines: List[str], dev) -> None:
             # capacity eviction: no transactions now — the re-ship is a
             # real MEM write when the evicted operand next misses
             lines.append(f"# SPILL {dev.channel_id} {payload}")
+        elif kind == "kvappend":
+            # paged-KV page write: the new tokens' h2d is charged as real
+            # MEM lines by the adjacent transfer event; this marker keys
+            # the bytes to the KV cache for replay-neutral attribution
+            lines.append(f"# KVAPPEND {dev.channel_id} {payload}")
+        elif kind == "kvevict":
+            # paged-KV page eviction under capacity pressure: zero
+            # transactions now — the re-ship is real MEM traffic (and a
+            # host-link reupload charge) when the page is restored
+            lines.append(f"# KVEVICT {dev.channel_id} {payload}")
         elif kind in ("tstart", "tend"):
             # async-timeline schedule markers: zero commands, pure timing
             op_id, cycles = payload
@@ -339,6 +353,10 @@ class TraceStats:
         default_factory=collections.Counter)       # per channel
     spill_bytes: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)       # per channel
+    kvappend_bytes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per channel
+    kvevict_bytes: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per channel
     # -- async-timeline schedule markers: (channel, op_id) -> cycles.
     # Empty on serialized traces; stripping the marker lines from an
     # async trace recovers the serialized byte stream ------------------
@@ -384,6 +402,8 @@ _STACK_RE = re.compile(r"^# STACK (\d+)$")
 _HOSTLINK_RE = re.compile(
     r"^# HOSTLINK (xstack|drain|retry|reupload|degrade) (\d+)$")
 _SPILL_RE = re.compile(r"^# SPILL (\d+) (\d+)$")
+_KVAPPEND_RE = re.compile(r"^# KVAPPEND (\d+) (\d+)$")
+_KVEVICT_RE = re.compile(r"^# KVEVICT (\d+) (\d+)$")
 _FAULT_RE = re.compile(r"^# FAULT (\d+) ([0-9.]+)$")
 _RECOVER_RE = re.compile(r"^# RECOVER (\d+) (\d+)$")
 _TSTART_RE = re.compile(r"^# TSTART (\d+) (\d+) ([0-9.]+)$")
@@ -421,6 +441,14 @@ def parse_trace(text: str) -> TraceStats:
         mm = _SPILL_RE.match(line)
         if mm:
             stats.spill_bytes[int(mm.group(1))] += int(mm.group(2))
+            continue
+        mm = _KVAPPEND_RE.match(line)
+        if mm:
+            stats.kvappend_bytes[int(mm.group(1))] += int(mm.group(2))
+            continue
+        mm = _KVEVICT_RE.match(line)
+        if mm:
+            stats.kvevict_bytes[int(mm.group(1))] += int(mm.group(2))
             continue
         mm = _RESIDENT_RE.match(line)
         if mm:

@@ -125,6 +125,14 @@ class Server:
                 f"to decode — truncate the prompt or grow cache_len")
 
     @property
+    def _kv(self):
+        """The offload sidecar's KV manager when KV-resident attention
+        is on (``DecodeOffload(kv_offload=True)``), else None — every
+        hook below is a no-op without it."""
+        off = self.pim_offload
+        return off.kv if off is not None else None
+
+    @property
     def surviving_fraction(self) -> float:
         """Fraction of PIM decode capacity still alive (1.0 without an
         offload sidecar or without faults) — scales the admission cap."""
@@ -164,7 +172,10 @@ class Server:
             req = self.active[f.slot]
             self.active[f.slot] = None
             # the slot's cache is considered poisoned: restart the
-            # request from its prompt (prefill re-runs on re-admission)
+            # request from its prompt (prefill re-runs on re-admission);
+            # its PIM-resident KV drops with it
+            if self._kv is not None:
+                self.pim_offload.kv_release(req.uid)
             req.out_tokens = []
             req.first_token_at = 0.0
             req.retries += 1
@@ -218,6 +229,10 @@ class Server:
                         req.first_token_at - req.submitted_at)
                 self.active[i] = req
                 self.pos[i] = len(req.prompt)
+                # host prefill produced the prompt's KV: ship it onto
+                # the sidecar's PIM pages once, decode grows it in place
+                if self._kv is not None:
+                    self.pim_offload.kv_prefill(req.uid, len(req.prompt))
 
     def _retire(self, i: int):
         req = self.active[i]
@@ -225,6 +240,8 @@ class Server:
         req.finished_at = time.time()
         self.completed.append(req)
         self.active[i] = None
+        if self._kv is not None:
+            self.pim_offload.kv_release(req.uid)
         if self.metrics is not None:
             m = self.metrics
             m.counter("serve.requests", unit="requests",
@@ -261,7 +278,9 @@ class Server:
             self.params, jnp.asarray(toks),
             jnp.asarray(self.pos), self.caches)
         if self.pim_offload is not None:
-            self.pim_offload.step(len(live))
+            self.pim_offload.step(
+                len(live),
+                request_ids=[self.active[i].uid for i in live])
         nxt = np.asarray(jnp.argmax(logits, -1))
         for i in live:
             req = self.active[i]

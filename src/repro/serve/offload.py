@@ -42,6 +42,20 @@ process different requests concurrently.  Serialized mode is the
 default and is byte-identical in ledgers and traces to the previous
 behavior.
 
+``kv_offload=True`` extends the sidecar past the weight matmuls to the
+*whole* attention step: each request's KV cache lives resident in
+:data:`~repro.runtime.residency.KV_BLOCK_TOKENS`-token pages
+(:class:`~repro.runtime.kvcache.KVCacheManager`), the per-step K/V
+append is an in-place resident write (new-token bytes only), and the
+score GEMV (``K @ q``), in-place softmax epilogue, and context GEMV
+(``V^T @ probs``) run on the layer's home-stack channels under the
+``paged`` placement — so steady-state per-step h2d stays independent of
+context length.  ``kv_capacity_bytes`` bounds resident KV with paged
+LRU eviction (oldest pages of the coldest request; re-ship charged as
+``reupload`` link traffic).  Numeric mode cross-checks every head's
+attention output against the XLA FP32 reference, evictions and
+injected faults included.
+
 ``dump`` writes the trajectory as ``results/dryrun/*.pim_offload.json``
 so future changes to the cost model have a BENCH baseline to diff.
 """
@@ -51,15 +65,22 @@ import dataclasses
 import functools
 import hashlib
 import json
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core.isa import PIM_FREQ_HZ
 from repro.launch import hw
-from repro.runtime import BYTES_PER_ELEM, DeviceTensor, OpHandle, PIMRuntime
+from repro.runtime import (
+    BYTES_PER_ELEM,
+    DeviceTensor,
+    KVCacheManager,
+    OpHandle,
+    PIMRuntime,
+)
 from repro.sharding.rules import ame_pim_stack_map
 
 F16 = np.float16
@@ -287,6 +308,13 @@ class StepRecord:
     logits_max_err: float = 0.0     # same, lm_head output only
     overlapped: bool = False    # async DAG step: pim_cycles is the
     #                             timeline makespan, not a sum of ops
+    # -- KV-resident attention (kv_offload=True; all zero otherwise) --
+    kv_tokens: int = 0          # total context tokens across requests
+    kv_host_bytes: int = 0      # host HBM KV read bytes folded into host_s
+    attn_cycles: float = 0.0    # PIM cycles in attention ops (append +
+    #                             score + softmax + context; serialized
+    #                             sum — async overlaps them in pim_cycles)
+    attn_max_err: float = 0.0   # max |attn_pim - attn_xla| this step
 
     @property
     def pim_vs_host(self) -> float:
@@ -297,6 +325,13 @@ class StepRecord:
         d = dataclasses.asdict(self)
         d["pim_vs_host"] = self.pim_vs_host
         return d
+
+
+def _rid_key(rid: Hashable) -> int:
+    """Stable 32-bit key of a request id for seeded KV draws (``hash``
+    is process-randomized for strings)."""
+    return int.from_bytes(
+        hashlib.sha1(str(rid).encode()).digest()[:4], "big")
 
 
 class DecodeOffload:
@@ -337,6 +372,20 @@ class DecodeOffload:
     batch of independent single-slot decode requests across the layer
     blocks' home stacks.
 
+    ``kv_offload=True`` adds the attention step itself: per request
+    (ids via ``step(batch, request_ids=...)``; :meth:`kv_prefill` /
+    :meth:`kv_release` bracket the serve-loop lifecycle), each layer's
+    K/V append lands as an in-place resident page write and every kv
+    head runs score GEMV -> softmax -> context GEMV on the layer's
+    home-stack channels under the ``paged`` placement.  Only the new
+    token's KV bytes and the q vectors cross the bus per step — the
+    resident prefix re-ships **zero** bytes, so per-step h2d is flat in
+    context length (the context GEMV's K-split partials still drain
+    d2h for the host reduction; that is the one context-proportional
+    stream, and it is output-sized, not cache-sized).
+    ``kv_capacity_bytes`` bounds resident KV via
+    :class:`~repro.runtime.kvcache.KVCacheManager` paged eviction.
+
     Reproducibility: weights *and* per-step activations derive
     deterministically from the constructor's ``seed=`` (activations from
     per-``(in_dim, batch)`` child generators, so their values do not
@@ -354,7 +403,9 @@ class DecodeOffload:
                  placement: str = "balanced", numeric: bool = False,
                  seed: int = 0, atol: float = NUMERIC_ATOL,
                  engine: str = "batched", async_mode: bool = False,
-                 split_batch: int = 1, metrics=None, faults=None):
+                 split_batch: int = 1, metrics=None, faults=None,
+                 kv_offload: bool = False,
+                 kv_capacity_bytes: Optional[int] = None):
         self.cfg = cfg
         self.placement = placement
         self.numeric = numeric
@@ -419,6 +470,17 @@ class DecodeOffload:
         self.last_logits: Optional[np.ndarray] = None     # numeric mode
         self._act_cache: Dict[Tuple[int, int], np.ndarray] = {}
         self._ref_keys: Dict[int, bytes] = {}    # weight uid -> content key
+        # -- KV-resident attention (strictly additive when off) --
+        self.kv: Optional[KVCacheManager] = None
+        self._kv_group = max(1, cfg.n_heads // max(1, cfg.n_kv_heads))
+        if kv_offload:
+            self.kv = KVCacheManager(
+                self.rt, n_layers=cfg.n_layers,
+                n_kv_heads=max(1, cfg.n_kv_heads),
+                head_dim=cfg.head_dim_,
+                channels_for_layer=self._kv_channels,
+                capacity_bytes=kv_capacity_bytes,
+                numeric=numeric, metrics=metrics)
 
     def _draw_weight(self, rng, m: DecodeMatmul):
         """Weight payload for one instance of family ``m``: seeded FP16
@@ -435,6 +497,170 @@ class DecodeOffload:
             return tuple(range(len(self.rt.stack)))
         cps = self.rt.stack.channels_per_stack
         return tuple(range(home * cps, (home + 1) * cps))
+
+    # -- KV-resident attention (kv_offload=True) -----------------------------
+
+    def _kv_channels(self, layer: int) -> Tuple[int, ...]:
+        """Channels one layer's KV pages cycle over — its home stack,
+        minus fail-stopped channels (so page owners keep coinciding
+        with the healthy subset the attention GEMVs decompose on)."""
+        home = self.stack_map[layer] if self.stack_map is not None \
+            else None
+        chans = self._stack_channels(home)
+        inj = self.rt.faults
+        if inj is not None and inj.failed:
+            alive = tuple(c for c in chans if c not in inj.failed)
+            if alive:
+                return alive
+        return chans
+
+    def _kv_draw(self, tag: int, rid: Hashable, layer: int, head: int,
+                 t0: int, shape: Tuple[int, int]) -> np.ndarray:
+        """Seeded FP16 payload for one request's K/V/q draw, keyed by
+        the token offset it lands at — deterministic per request and
+        position regardless of admission or step order."""
+        rng = np.random.default_rng(
+            (self.seed, tag, _rid_key(rid), layer, head, t0))
+        return (rng.standard_normal(shape) * 0.05).astype(F16)
+
+    def _check_attention(self, K: DeviceTensor, VT: DeviceTensor,
+                         q: np.ndarray, y) -> float:
+        """Cross-check one head's attention-on-PIM output against the
+        XLA FP32 reference ``V^T @ softmax(K @ q)`` over the request's
+        full context (evicted-and-restored pages included — the host
+        mirrors are exact)."""
+        K32 = jnp.asarray(np.asarray(K.values), jnp.float32)
+        V32 = jnp.asarray(np.asarray(VT.values), jnp.float32)
+        probs = jax.nn.softmax(
+            jnp.matmul(K32, jnp.asarray(q, jnp.float32)), axis=0)
+        ref = np.asarray(jnp.matmul(V32, probs))
+        err = float(np.max(np.abs(np.asarray(y, np.float32) - ref)))
+        assert err < self.atol, \
+            ("attention", err, "attention-on-PIM diverged from the XLA "
+             "FP32 reference beyond FP16 accumulation tolerance")
+        return err
+
+    def kv_prefill(self, rid: Hashable, tokens: int,
+                   after: Optional[Sequence[OpHandle]] = None):
+        """Admit request ``rid`` with ``tokens`` prompt tokens: the host
+        prefill produced their KV, so every layer's pages ship in once
+        (h2d, ``# KVAPPEND``-marked) and decode steps grow from there.
+        Returns the last append's timeline handle on async runtimes."""
+        if self.kv is None:
+            raise ValueError("kv_prefill requires kv_offload=True")
+        if tokens <= 0:
+            raise ValueError(f"prefill needs >= 1 token, got {tokens}")
+        hd, heads = self.cfg.head_dim_, self.kv.n_kv_heads
+        self.kv.request(rid)
+        t0 = self.kv.tokens(rid)
+        handle = after
+        for ell in range(self.cfg.n_layers):
+            k_vals = v_vals = None
+            if self.numeric:
+                k_vals = [self._kv_draw(11, rid, ell, j, t0, (tokens, hd))
+                          for j in range(heads)]
+                v_vals = [self._kv_draw(13, rid, ell, j, t0, (hd, tokens))
+                          for j in range(heads)]
+            handle = self.kv.append_tokens(rid, ell, tokens,
+                                           k_vals, v_vals, after=handle)
+        return handle
+
+    def kv_release(self, rid: Hashable) -> int:
+        """Drop a retired (or knocked-out) request's KV; returns the
+        resident bytes freed.  No-op without ``kv_offload``."""
+        return self.kv.release(rid) if self.kv is not None else 0
+
+    def _attention_serialized(self, rid: Hashable
+                              ) -> Tuple[float, int, float]:
+        """One request's full attention step, barrier-per-op: per layer,
+        append the new token's K/V in place, then per kv head run the
+        score GEMV (kept resident), the in-place softmax epilogue, and
+        the context GEMV on the layer's home channels.  Returns
+        ``(cycles, flops, max_err)``."""
+        cfg, kv = self.cfg, self.kv
+        hd, heads, group = cfg.head_dim_, kv.n_kv_heads, self._kv_group
+        kv.begin_decode(rid)        # restores evicted pages first
+        t0 = kv.tokens(rid)
+        cycles, flops, max_err = 0.0, 0, 0.0
+        for ell in range(cfg.n_layers):
+            chans = self._kv_channels(ell)
+            k_vals = v_vals = None
+            if self.numeric:
+                k_vals = [self._kv_draw(11, rid, ell, j, t0, (1, hd))
+                          for j in range(heads)]
+                v_vals = [self._kv_draw(13, rid, ell, j, t0, (hd, 1))
+                          for j in range(heads)]
+            kv.append_tokens(rid, ell, 1, k_vals, v_vals)
+            for j in range(heads):
+                K, VT = kv.tensors(rid, ell, j)
+                q = self._kv_draw(17, rid, ell, j, t0, (hd, group)) \
+                    if self.numeric else np.zeros((hd, group), F16)
+                scores, rep = self.rt.gemm(
+                    K, q, placement="paged", keep_output=True,
+                    execute=self.numeric, channels=chans)
+                cycles += rep.makespan_cycles
+                flops += rep.total_flops
+                _, rep = self.rt.softmax(scores, placement="paged",
+                                         execute=self.numeric,
+                                         channels=chans)
+                cycles += rep.makespan_cycles
+                flops += rep.total_flops
+                y, rep = self.rt.gemm(
+                    VT, scores, placement="paged",
+                    execute=self.numeric, channels=chans)
+                cycles += rep.makespan_cycles
+                flops += rep.total_flops
+                if self.numeric:
+                    max_err = max(max_err,
+                                  self._check_attention(K, VT, q, y))
+                scores.evict()
+        return cycles, flops, max_err
+
+    def _attention_async(self, rid: Hashable, ell: int, t0: int,
+                         after: Optional[Sequence[OpHandle]]
+                         ) -> Tuple[List[OpHandle], float, int, float]:
+        """One request's attention DAG for layer ``ell``: the K/V append
+        waits on the layer's q/k/v projections (``after``), each head
+        chains score -> softmax -> context through residency deps, and
+        the returned context handles gate the layer's ``attn.wo``.
+        Returns ``(handles, cycles, flops, max_err)`` (cycles = summed
+        op makespans; the timeline overlaps them across heads)."""
+        cfg, kv = self.cfg, self.kv
+        hd, heads, group = cfg.head_dim_, kv.n_kv_heads, self._kv_group
+        chans = self._kv_channels(ell)
+        k_vals = v_vals = None
+        if self.numeric:
+            k_vals = [self._kv_draw(11, rid, ell, j, t0, (1, hd))
+                      for j in range(heads)]
+            v_vals = [self._kv_draw(13, rid, ell, j, t0, (hd, 1))
+                      for j in range(heads)]
+        kv.append_tokens(rid, ell, 1, k_vals, v_vals, after=after)
+        out: List[OpHandle] = []
+        cycles, flops, max_err = 0.0, 0, 0.0
+        for j in range(heads):
+            K, VT = kv.tensors(rid, ell, j)
+            q = self._kv_draw(17, rid, ell, j, t0, (hd, group)) \
+                if self.numeric else np.zeros((hd, group), F16)
+            f_score = self.rt.gemm(
+                K, q, placement="paged", keep_output=True,
+                execute=self.numeric, channels=chans, after=after)
+            scores = f_score.result
+            f_sm = self.rt.softmax(scores, placement="paged",
+                                   execute=self.numeric, channels=chans)
+            f_ctx = self.rt.gemm(
+                VT, scores, placement="paged",
+                execute=self.numeric, channels=chans)
+            for f in (f_score, f_sm, f_ctx):
+                cycles += f.report.makespan_cycles
+                flops += f.report.total_flops
+            if self.numeric:
+                max_err = max(max_err,
+                              self._check_attention(K, VT, q,
+                                                    f_ctx.result))
+            scores.evict()
+            f_score.result = f_sm.result = f_ctx.result = None
+            out.append(f_ctx)
+        return out, cycles, flops, max_err
 
     def _build_async_plan(self, rng, layer_stacks: Optional[List[int]]
                           ) -> None:
@@ -707,9 +933,17 @@ class DecodeOffload:
              f"stack {dead} weights -> stack {survivor} "
              f"({migrated} bytes)"))
 
-    def step(self, batch: int) -> StepRecord:
+    def step(self, batch: int,
+             request_ids: Optional[Sequence[Hashable]] = None
+             ) -> StepRecord:
         """Account (and in numeric mode, execute) one decode step over
         ``batch`` live slots.
+
+        With ``kv_offload=True``, ``request_ids`` names the live
+        requests whose KV grows this step (default ``range(batch)`` for
+        direct driving) and the step additionally runs each request's
+        attention sub-step on PIM (:meth:`_attention_serialized` /
+        :meth:`_attention_async`).
 
         In async mode the step is submitted as the op DAG (stages chain,
         ops within a stage overlap on their channel groups) and
@@ -729,7 +963,7 @@ class DecodeOffload:
         from repro.faults.injector import NoHealthyChannelsError
         self._maybe_failover()
         try:
-            return self._step_once(batch)
+            return self._step_once(batch, request_ids)
         except NoHealthyChannelsError:
             failovers = (self.rt.faults.counters.get("stack_failovers", 0)
                          if self.rt.faults is not None else 0)
@@ -740,20 +974,44 @@ class DecodeOffload:
                 # nothing migrated (partial stack death, or no survivor
                 # to migrate to) — the fault is not recoverable here
                 raise
-            return self._step_once(batch)
+            return self._step_once(batch, request_ids)
 
-    def _step_once(self, batch: int) -> StepRecord:
+    def _step_once(self, batch: int,
+                   request_ids: Optional[Sequence[Hashable]] = None
+                   ) -> StepRecord:
         """One attempt at a decode step (see :meth:`step`)."""
         before = {d.channel_id: d.snapshot() for d in self.rt.stack}
         pim_cycles = 0.0
         flops = 0
         act_bytes = 0
         max_err = logits_err = 0.0
+        rids: List[Hashable] = []
+        if self.kv is not None:
+            rids = list(request_ids) if request_ids is not None \
+                else list(range(batch))
+        attn_cycles, attn_err = 0.0, 0.0
         if self.async_mode:
             tl = self.rt.timeline
             t0 = tl.now
+            kv_t0: Dict[Hashable, int] = {}
+            for rid in rids:
+                self.kv.begin_decode(rid)   # restore submits on timeline
+                kv_t0[rid] = self.kv.tokens(rid)
+            layer_idx = 0
             prev = self._step_tail      # chain steps: sampling feeds back
             for stage in self._stages:
+                if rids and stage[0].name == "attn.wo":
+                    # the layer's attention DAG gates its wo projection
+                    ctx: List[OpHandle] = []
+                    for rid in rids:
+                        hs, cyc, fl, err = self._attention_async(
+                            rid, layer_idx, kv_t0[rid], prev)
+                        ctx.extend(hs)
+                        attn_cycles += cyc
+                        flops += fl
+                        attn_err = max(attn_err, err)
+                    prev = ctx or prev
+                    layer_idx += 1
                 handles = []
                 for op in stage:
                     x = self._activation(op.in_dim, batch)
@@ -791,13 +1049,27 @@ class DecodeOffload:
                         max_err = max(max_err, err)
                         logits_err = max(logits_err, lerr)
                 act_bytes += m.in_dim * batch * BYTES_PER_ELEM * m.count
+            for rid in rids:
+                cyc, fl, err = self._attention_serialized(rid)
+                attn_cycles += cyc
+                pim_cycles += cyc       # attention serializes like ops
+                flops += fl
+                attn_err = max(attn_err, err)
+        max_err = max(max_err, attn_err)
+        # the host roofline for the same math re-reads every live
+        # request's K and V from HBM each step (no residency there)
+        kv_tokens = sum(self.kv.tokens(r) for r in rids) \
+            if self.kv is not None else 0
+        kv_host_bytes = (kv_tokens * self.cfg.head_dim_ * BYTES_PER_ELEM
+                         * 2 * self.kv.n_kv_heads * self.cfg.n_layers) \
+            if self.kv is not None else 0
         h2d = sum(d.xfer.h2d_bytes - before[d.channel_id].h2d_bytes
                   for d in self.rt.stack)
         d2h = sum(d.xfer.d2h_bytes - before[d.channel_id].d2h_bytes
                   for d in self.rt.stack)
         reuse = sum(d.reuse_bytes - before[d.channel_id].reuse_bytes
                     for d in self.rt.stack)
-        host_bytes = self.weight_bytes + act_bytes
+        host_bytes = self.weight_bytes + act_bytes + kv_host_bytes
         host_compute_s = flops / hw.PEAK_FLOPS
         host_memory_s = host_bytes / hw.HBM_BW
         rec = StepRecord(
@@ -808,7 +1080,9 @@ class DecodeOffload:
             host_bound=("compute" if host_compute_s > host_memory_s
                         else "memory"),
             numeric=self.numeric, numeric_max_err=max_err,
-            logits_max_err=logits_err, overlapped=self.async_mode)
+            logits_max_err=logits_err, overlapped=self.async_mode,
+            kv_tokens=kv_tokens, kv_host_bytes=kv_host_bytes,
+            attn_cycles=attn_cycles, attn_max_err=attn_err)
         self.steps.append(rec)
         if self.metrics is not None:
             m = self.metrics
@@ -822,6 +1096,11 @@ class DecodeOffload:
                         help="per-step PIM makespan (async: timeline "
                              "makespan; serialized: sum of ops)").record(
                 rec.pim_cycles)
+            if self.kv is not None:
+                m.histogram("offload.attn_step_cycles", unit="cycles",
+                            help="per-step PIM cycles in attention ops "
+                                 "(append + score + softmax + context)"
+                            ).record(rec.attn_cycles)
         return rec
 
     def _visit_groups(self) -> List[List[List[_AsyncOp]]]:
@@ -950,6 +1229,9 @@ class DecodeOffload:
             "steady_host_s": steady.host_s,
             "steady_host_bound": steady.host_bound,
             "steady_pim_vs_host": steady.pim_vs_host,
+            "steady_kv_tokens": steady.kv_tokens,
+            "steady_attn_cycles": steady.attn_cycles,
+            "kv": self.kv.summary() if self.kv is not None else None,
             "steps": [s.to_json() for s in self.steps],
         }
 

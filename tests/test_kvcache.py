@@ -1,0 +1,457 @@
+"""KV-cache-resident attention decode (PR 8).
+
+Covers the paged placement policy (block-cyclic, growth-stable, and
+deliberately un-memoized), :class:`PagedTensor` in-place growth, the
+:class:`KVCacheManager` append/evict/restore ledger, the KVAPPEND /
+KVEVICT trace markers, DecodeOffload's attention-on-PIM step (zero KV
+prefix re-upload; numeric cross-check vs the XLA FP32 reference across
+evictions and injected faults), and the serve-loop lifecycle hooks.
+"""
+import dataclasses
+from collections import Counter
+
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.core.isa import ROWNUM
+from repro.runtime import (
+    KV_BLOCK_TOKENS,
+    KVCacheManager,
+    PagedTensor,
+    PIMRuntime,
+    paged,
+    placement_shards,
+    validate_cover,
+)
+from repro.runtime.trace import emit_trace, parse_trace
+from repro.serve.offload import DecodeOffload
+
+RNG = np.random.default_rng(0)
+
+
+def _small():
+    return get("qwen3-1.7b").reduced()
+
+
+def _kv_mgr(rt, channels, **kw):
+    chans = tuple(range(channels))
+    kw.setdefault("n_layers", 1)
+    kw.setdefault("n_kv_heads", 1)
+    kw.setdefault("head_dim", 64)
+    return KVCacheManager(rt, channels_for_layer=lambda ell: chans, **kw)
+
+
+# ---------------------------------------------------------------------------
+# paged placement policy
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("m,k,n,c", [
+    (1, 64, 4, 8), (64, 64, 1, 1), (128, 64, 2, 4), (200, 64, 2, 8),
+    (512, 64, 2, 4), (64, 200, 2, 8), (64, 640, 4, 3),
+])
+def test_paged_covers_exactly(m, k, n, c):
+    shards = paged(m, k, n, c)
+    validate_cover(shards, m, k, n)
+
+
+def test_paged_is_growth_stable():
+    """Growing the context must never move an existing page's channel —
+    that is the whole point of block-cyclic ownership."""
+    for c in (1, 3, 8):
+        small = {s.m0: s.channel for s in paged(512, 64, 2, c)}
+        grown = {s.m0: s.channel for s in paged(640, 64, 2, c)}
+        assert small == {m0: grown[m0] for m0 in small}
+        # transposed regime: K-groups along the k axis
+        ksmall = {s.k0: s.channel for s in paged(64, 512, 2, c)}
+        kgrown = {s.k0: s.channel for s in paged(64, 640, 2, c)}
+        assert ksmall == {k0: kgrown[k0] for k0 in ksmall}
+
+
+def test_paged_page_owner_matches_manager_formula():
+    """Shard channel for page b is chans[b % C] in both regimes — the
+    invariant KVCacheManager's ownership formula relies on."""
+    for c in (1, 2, 5):
+        for s in paged(5 * ROWNUM, 64, 2, c):
+            assert s.channel == (s.m0 // ROWNUM) % c
+        for s in paged(64, 5 * ROWNUM, 2, c):
+            assert s.channel == (s.k0 // ROWNUM) % c
+
+
+def test_paged_bypasses_placement_memoization():
+    """Block-quantized KV shapes grow every step; caching them would
+    blow up the lru_cache key space — 'paged' must not memoize, the
+    fixed policies must keep their identity-cached fast path."""
+    a = placement_shards("paged", 256, 64, 2, 4)
+    b = placement_shards("paged", 256, 64, 2, 4)
+    assert a == b
+    assert a is not b           # fresh computation, no cache entry
+    x = placement_shards("balanced", 256, 64, 2, 4)
+    y = placement_shards("balanced", 256, 64, 2, 4)
+    assert x is y               # memoized exactly as before
+
+
+# ---------------------------------------------------------------------------
+# PagedTensor
+# ---------------------------------------------------------------------------
+
+
+def test_paged_tensor_grows_in_place():
+    rt = PIMRuntime(channels=4)
+    t = PagedTensor(rt.stack, 64, grow_axis=0, numeric=True)
+    v1 = RNG.standard_normal((100, 64)).astype(np.float16)
+    t.append(100, v1)
+    assert t.shape == (100, 64) and t.tokens == 100
+    np.testing.assert_array_equal(t.values, v1)
+    v2 = RNG.standard_normal((60, 64)).astype(np.float16)
+    t.append(60, v2)
+    assert t.shape == (160, 64) and t.num_blocks == 2
+    np.testing.assert_array_equal(t.values[:100], v1)
+    np.testing.assert_array_equal(t.values[100:], v2)
+    with pytest.raises(ValueError):
+        t.append(0)
+
+
+def test_paged_tensor_transposed_axis():
+    rt = PIMRuntime(channels=4)
+    t = PagedTensor(rt.stack, 32, grow_axis=1, numeric=True)
+    v = RNG.standard_normal((32, 130)).astype(np.float16)
+    t.append(130, v)
+    assert t.shape == (32, 130)
+    np.testing.assert_array_equal(t.values, v)
+    assert t.block_box(1) == (0, 32, KV_BLOCK_TOKENS, 130)
+
+
+def test_trailing_page_remark_supersedes():
+    """Re-marking the grown trailing page must replace the old contained
+    box, not double-count it."""
+    rt = PIMRuntime(channels=2)
+    dev = rt.stack[0]
+    t = PagedTensor(rt.stack, 64, grow_axis=0)
+    t.append(100)
+    t.mark_resident(0, t.block_box(0))
+    b0 = dev.resident_bytes_of(t.uid)
+    assert b0 == 100 * 64 * 2
+    t.append(28)
+    t.mark_resident(0, t.block_box(0))
+    assert len(dev.resident[t.uid]) == 1
+    assert dev.resident_bytes_of(t.uid) == KV_BLOCK_TOKENS * 64 * 2
+
+
+# ---------------------------------------------------------------------------
+# KVCacheManager: appends, zero prefix re-upload, trace markers
+# ---------------------------------------------------------------------------
+
+
+def test_append_charges_new_tokens_only():
+    rt = PIMRuntime(channels=4)
+    kv = _kv_mgr(rt, 4)
+    kv.request("r")
+    kv.append_tokens("r", 0, 256)           # prefill: 2 pages x K,V
+    base = sum(d.xfer.h2d_bytes for d in rt.stack)
+    assert base == 256 * 64 * 2 * 2         # tokens * hd * B/elem * (K+V)
+    for _ in range(3):                      # steady-state decode appends
+        before = sum(d.xfer.h2d_bytes for d in rt.stack)
+        kv.append_tokens("r", 0, 1)
+        assert sum(d.xfer.h2d_bytes for d in rt.stack) - before \
+            == 1 * 64 * 2 * 2               # one token, never the prefix
+    assert kv.resident_kv_bytes == 259 * 64 * 2 * 2
+
+
+def test_append_h2d_independent_of_context_length():
+    """The tentpole invariant: per-step host-link bytes at steady state
+    do not depend on how long the context already is."""
+    deltas = []
+    for prefill in (128, 1024):
+        rt = PIMRuntime(channels=8)
+        kv = _kv_mgr(rt, 8)
+        kv.request("r")
+        kv.append_tokens("r", 0, prefill)
+        before = sum(d.xfer.h2d_bytes for d in rt.stack)
+        kv.append_tokens("r", 0, 1)
+        deltas.append(sum(d.xfer.h2d_bytes for d in rt.stack) - before)
+    assert deltas[0] == deltas[1]
+
+
+def test_attention_gemvs_hit_residency_page_for_page():
+    """Score GEMV ships only q; softmax and context GEMV ship nothing
+    (scores stay resident, V^T pages are resident)."""
+    rt = PIMRuntime(channels=8)
+    kv = KVCacheManager(rt, n_layers=1, n_kv_heads=1, head_dim=64,
+                        channels_for_layer=lambda ell: tuple(range(8)),
+                        numeric=True)
+    kv.request("r")
+    hd, group, tokens = 64, 2, 300
+    kv.append_tokens(
+        "r", 0, tokens,
+        k_vals=[(RNG.standard_normal((tokens, hd)) * 0.05
+                 ).astype(np.float16)],
+        v_vals=[(RNG.standard_normal((hd, tokens)) * 0.05
+                 ).astype(np.float16)])
+    K, VT = kv.tensors("r", 0, 0)
+    q = (RNG.standard_normal((hd, group)) * 0.05).astype(np.float16)
+
+    h2d = lambda: sum(d.xfer.h2d_bytes for d in rt.stack)
+    before = h2d()
+    scores, _ = rt.gemm(K, q, placement="paged", keep_output=True)
+    # q alone, once per participating channel (3 pages -> 3 channels);
+    # the 300-token K prefix ships nothing
+    assert h2d() - before == 3 * hd * group * 2
+    before = h2d()
+    rt.softmax(scores, placement="paged")
+    assert h2d() - before == 0
+    before = h2d()
+    y, _ = rt.gemm(VT, scores, placement="paged")
+    assert h2d() - before == 0
+
+    # numeric: matches FP32 softmax-attention over the full context
+    K32 = np.asarray(K.values, np.float32)
+    V32 = np.asarray(VT.values, np.float32)
+    s = K32 @ q.astype(np.float32)
+    e = np.exp(s - s.max(axis=0, keepdims=True))
+    ref = V32 @ (e / e.sum(axis=0, keepdims=True))
+    assert float(np.max(np.abs(np.asarray(y, np.float32) - ref))) < 2e-4
+
+
+def test_kvappend_kvevict_trace_roundtrip():
+    rt = PIMRuntime(channels=4)
+    kv = _kv_mgr(rt, 4, capacity_bytes=80_000)
+    kv.request("a")
+    kv.begin_decode("a")
+    kv.append_tokens("a", 0, 400)           # over budget: evicts pages
+    assert kv.evictions > 0
+    text = emit_trace(rt.stack)
+    assert "# KVAPPEND" in text and "# KVEVICT" in text
+    stats = parse_trace(text)
+    assert sum(stats.kvappend_bytes.values()) == kv.append_bytes
+    assert sum(stats.kvevict_bytes.values()) == kv.evict_bytes
+    # replay-neutral: a stripped trace still parses to the same PIM
+    # command stream (markers are comment-shaped)
+    plain = "\n".join(ln for ln in text.splitlines()
+                      if not ln.startswith("# KV"))
+    assert parse_trace(plain).pim_commands == stats.pim_commands
+
+
+def test_release_reclaims_capacity():
+    rt = PIMRuntime(channels=4)
+    kv = _kv_mgr(rt, 4)
+    kv.request("a")
+    kv.append_tokens("a", 0, 200)
+    held = kv.resident_kv_bytes
+    assert held > 0
+    assert kv.release("a") == held
+    assert kv.resident_kv_bytes == 0
+    assert kv.release("a") == 0             # idempotent
+
+
+# ---------------------------------------------------------------------------
+# eviction edge cases (satellite: paged eviction under pressure)
+# ---------------------------------------------------------------------------
+
+
+def test_evicts_oldest_page_of_coldest_request():
+    rt = PIMRuntime(channels=4)
+    kv = _kv_mgr(rt, 4, capacity_bytes=300 * 64 * 2 * 2)
+    for rid in ("cold", "hot"):
+        kv.request(rid)
+        kv.begin_decode(rid)
+        kv.append_tokens(rid, 0, 140)       # 2 pages each, fits
+    assert kv.evictions == 0
+    kv.begin_decode("hot")                  # hot is now the youngest
+    kv.append_tokens("hot", 0, 128)         # over budget
+    cold, hot = kv._reqs["cold"], kv._reqs["hot"]
+    assert 0 in cold.evicted                # oldest page, coldest request
+    assert not hot.evicted
+
+
+def test_evicting_currently_decoding_request_stays_correct():
+    """A lone request under a tight budget evicts its own old pages;
+    the next attention step re-ships them at the residency miss and the
+    numerics never notice (host mirrors are exact)."""
+    cfg = _small()
+    off = DecodeOffload(cfg, channels=4, numeric=True, kv_offload=True,
+                        kv_capacity_bytes=64_000)
+    off.kv_prefill("solo", 300)
+    assert off.kv.evictions > 0             # prefill alone overflows
+    r1 = off.step(1, request_ids=["solo"])
+    r2 = off.step(1, request_ids=["solo"])
+    assert max(r1.attn_max_err, r2.attn_max_err) < 2e-4
+    assert off.kv.restore_bytes > 0         # evicted pages re-shipped
+
+
+def test_capacity_smaller_than_one_layer_is_graceful():
+    """Trailing pages are never evicted, so a budget below one layer's
+    KV stays over budget gracefully instead of thrashing."""
+    cfg = _small()
+    off = DecodeOffload(cfg, channels=4, numeric=True, kv_offload=True,
+                        kv_capacity_bytes=1024)
+    off.kv_prefill("r", 100)
+    ev0 = off.kv.evictions
+    r = off.step(1, request_ids=["r"])
+    assert r.attn_max_err < 2e-4
+    assert off.kv.resident_kv_bytes > 1024          # floor holds
+    assert off.kv.evictions == ev0                  # no thrash loop
+
+
+def test_eviction_is_deterministic():
+    def run():
+        cfg = _small()
+        off = DecodeOffload(cfg, channels=4, numeric=True,
+                            kv_offload=True, kv_capacity_bytes=200_000)
+        for rid in ("a", "b"):
+            off.kv_prefill(rid, 260)
+        for _ in range(3):
+            off.step(2, request_ids=["a", "b"])
+        return (off.kv.summary(),
+                [d.xfer.h2d_bytes for d in off.rt.stack],
+                [s.h2d_bytes for s in off.steps])
+    assert run() == run()
+
+
+# ---------------------------------------------------------------------------
+# DecodeOffload: attention on PIM
+# ---------------------------------------------------------------------------
+
+
+def test_offload_attention_h2d_flat_in_context():
+    """Full decode steps: per-step h2d at steady state equals the
+    new-token activations + q + new KV regardless of context length."""
+    cfg = _small()
+    off = DecodeOffload(cfg, channels=4, numeric=True, kv_offload=True)
+    off.kv_prefill(0, 140)
+    recs = [off.step(1, request_ids=[0]) for _ in range(4)]
+    assert len({r.h2d_bytes for r in recs[1:]}) == 1
+    assert max(r.attn_max_err for r in recs) < 2e-4
+    assert recs[-1].attn_cycles > 0
+    assert recs[-1].kv_tokens == 144
+    # later steps see a longer context: attention cycles grow, h2d not
+    assert recs[-1].attn_cycles >= recs[0].attn_cycles
+
+
+def test_offload_attention_async_matches_reference():
+    cfg = _small()
+    off = DecodeOffload(cfg, channels=4, numeric=True, async_mode=True,
+                        kv_offload=True)
+    off.kv_prefill("r", 40)
+    r1 = off.step(1, request_ids=["r"])
+    r2 = off.step(1, request_ids=["r"])
+    assert max(r1.attn_max_err, r2.attn_max_err) < 2e-4
+    assert r1.h2d_bytes == r2.h2d_bytes
+    assert r2.overlapped and r2.attn_cycles > 0
+    # the DAG overlaps attention with the step's other ops: the step
+    # makespan grows by less than the summed attention op makespans
+    assert r2.pim_cycles < r2.attn_cycles + sum(
+        s.pim_cycles for s in [r2]) + r2.attn_cycles
+
+
+def test_offload_roofline_includes_attention():
+    """Satellite: the PIM-vs-host roofline accounts attention FLOPs and
+    the host's per-step KV HBM reads."""
+    cfg = _small()
+    plain = DecodeOffload(cfg, channels=4)
+    kvoff = DecodeOffload(cfg, channels=4, kv_offload=True)
+    kvoff.kv_prefill(0, 200)
+    rp = plain.step(1)
+    rk = kvoff.step(1, request_ids=[0])
+    assert rk.flops > rp.flops              # attention GEMV flops added
+    assert rk.kv_host_bytes > 0
+    assert rk.kv_host_bytes == rk.kv_tokens * cfg.head_dim_ * 2 * 2 \
+        * max(1, cfg.n_kv_heads) * cfg.n_layers
+    roof = kvoff.roofline()
+    assert roof["kv"]["append_bytes"] > 0
+    assert roof["steady_kv_tokens"] == rk.kv_tokens
+    assert roof["steady_attn_cycles"] == rk.attn_cycles
+    assert plain.roofline()["kv"] is None
+
+
+def test_fault_kv_page_loss_reships_as_reupload():
+    """Killing a channel wipes its KV pages; the next attention step
+    re-ships them (charged as reupload on the cluster link) and the
+    numeric cross-check still holds."""
+    cfg = _small()
+    off = DecodeOffload(cfg, channels=4, stacks=2, numeric=True,
+                        kv_offload=True, faults="kill channel 1 @ 1000")
+    off.kv_prefill("f", 200)
+    recs = [off.step(1, request_ids=["f"]) for _ in range(3)]
+    assert off.rt.faults.failed == {1}
+    kinds = Counter(k for k, _ in off.rt.stack.link.events)
+    assert kinds["reupload"] > 0
+    assert max(r.attn_max_err for r in recs) < 2e-4
+
+
+def test_kv_offload_validation():
+    cfg = _small()
+    off = DecodeOffload(cfg, channels=4)
+    with pytest.raises(ValueError):
+        off.kv_prefill(0, 10)               # kv_offload not enabled
+    off2 = DecodeOffload(cfg, channels=4, kv_offload=True)
+    with pytest.raises(ValueError):
+        off2.kv_prefill(0, 0)
+    with pytest.raises(ValueError):
+        DecodeOffload(cfg.replace(head_dim=256), channels=4,
+                      kv_offload=True)      # page must span one block
+
+
+# ---------------------------------------------------------------------------
+# empty case: strictly additive
+# ---------------------------------------------------------------------------
+
+
+def test_without_kv_offload_nothing_changes():
+    """kv_offload=False must be byte-identical to the pre-KV sidecar:
+    same StepRecords (new fields all zero), same ledgers, same trace."""
+    cfg = _small()
+    a = DecodeOffload(cfg, channels=4)
+    b = DecodeOffload(cfg, channels=4)
+    ra = a.step(2, request_ids=["x", "y"])  # ids ignored without kv
+    rb = b.step(2)
+    assert dataclasses.asdict(ra) == dataclasses.asdict(rb)
+    assert ra.kv_tokens == 0 and ra.attn_cycles == 0.0
+    assert [d.xfer for d in a.rt.stack] == [d.xfer for d in b.rt.stack]
+    assert emit_trace(a.rt.stack) == emit_trace(b.rt.stack)
+
+
+# ---------------------------------------------------------------------------
+# serve-loop lifecycle
+# ---------------------------------------------------------------------------
+
+
+def _server(**kw):
+    import jax
+
+    from repro.models import model as lm
+    from repro.serve.loop import Server
+
+    cfg = get("qwen3-1.7b").reduced().replace(n_layers=2, d_model=64,
+                                              d_ff=128, vocab_size=128)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    off = DecodeOffload(cfg, channels=4, numeric=True, kv_offload=True)
+    return Server(cfg, params, cache_len=48, pim_offload=off, **kw), off
+
+
+def test_serve_loop_kv_lifecycle():
+    from repro.serve.loop import Request
+    srv, off = _server(slots=2)
+    for uid in range(3):
+        srv.submit(Request(uid=uid,
+                           prompt=RNG.integers(1, 127, 6).astype(np.int32),
+                           max_new=4))
+    done = srv.run_until_drained()
+    assert len(done) == 3
+    assert len(off.kv._reqs) == 0           # every retire released its KV
+    assert off.kv.append_bytes > 0
+    assert max(s.attn_max_err for s in off.steps) < 2e-4
+
+
+def test_serve_fault_knockout_releases_kv():
+    from repro.serve.loop import Request
+    srv, off = _server(slots=1, faults="fail slot 0 @ iter 2")
+    srv.submit(Request(uid=9,
+                       prompt=RNG.integers(1, 127, 6).astype(np.int32),
+                       max_new=6))
+    srv.run_until_drained()
+    # the knocked-out request re-prefilled from scratch and completed
+    assert len(srv.completed) == 1
+    assert srv.retries_total == 1
+    assert len(off.kv._reqs) == 0

@@ -43,6 +43,15 @@ cost model + the functional PIM engine.
             per-step h2d flat in context length (new-token bytes only),
             and paged-eviction seed determinism; gates feed
             ``results/BENCH_runtime.json`` (CI ``bench-kv``)
+  serve   — production-traffic serving under load: the throughput-vs-
+            SLO-attainment frontier (6 Poisson load points per model,
+            qwen3-1.7b + mixtral-8x22b) for disaggregated
+            prefill/decode vs the colocated baseline (>= 1.3x goodput
+            at the SLO knee), seed-identical latency percentiles across
+            two runs, and zero-traffic additivity (ledgers ==-equal,
+            traces byte-identical with the traffic layer off); the
+            frontier + gates feed ``results/BENCH_runtime.json``
+            (CI ``bench-serve``)
 
 Each returns rows of (name, us_per_call, derived) where us_per_call is the
 measured host execution time of the functional engine (small tiles; the
@@ -349,6 +358,13 @@ LAST_FAULTS_METRICS: dict = {}
 #: gates the paged-vs-streamed attention speedup, context-independent
 #: per-step h2d, and eviction determinism)
 LAST_KV_METRICS: dict = {}
+
+#: measured serving metrics of the last ``serve`` section run — merged
+#: into ``results/BENCH_runtime.json`` *unrounded* (the ``frontier``
+#: value is a nested per-config structure, not a scalar); CI
+#: ``bench-serve`` gates the disagg-vs-colocated knee-goodput ratio,
+#: seed determinism, and zero-traffic additivity
+LAST_SERVE_METRICS: dict = {}
 
 
 def cluster_sweep() -> List[Row]:
@@ -961,6 +977,167 @@ def kv_sweep() -> List[Row]:
     return rows
 
 
+def serve_sweep() -> List[Row]:
+    """Production-traffic serving gates (CI ``bench-serve``).
+
+    * **SLO frontier, disaggregated vs colocated** — for each model
+      config (qwen3-1.7b dense, mixtral-8x22b MoE) sweep six Poisson
+      load points (0.25..1.0 x the analytic capacity) through
+      :class:`repro.serve.loop.TrafficServer` in both phase layouts.
+      The prompt length is auto-balanced so one request's prefill work
+      roughly equals its decode work — the regime where disaggregation
+      pays most and the colocated baseline is *not* a strawman (each
+      phase alone would saturate the shared engine at the same rate).
+      Gate: disaggregated goodput at the SLO knee (highest-load point
+      with >= 0.9 attainment, else the max-goodput point) must be
+      >= 1.3x the colocated knee goodput for *every* config;
+    * **seed determinism** — two fresh servers over the same seeded
+      trace produce ``==``-equal latency summaries (every percentile,
+      byte count, and iteration count);
+    * **zero-traffic additivity** — constructing a
+      :class:`TrafficServer` around an offload and running an *empty*
+      trace must leave the offload byte-identical to a bare one:
+      ``==``-equal host-link ledgers, per-channel h2d ledgers, and
+      per-step records, plus byte-identical ``emit_trace`` output.
+    """
+    rows: List[Row] = []
+    from repro.configs import get
+    from repro.runtime.trace import emit_trace
+    from repro.serve.loop import TrafficServer
+    from repro.serve.offload import DecodeOffload
+    from repro.serve.traffic import SLO, HostCostModel, poisson_trace
+
+    SLOTS, MAX_NEW, CHUNK, N_REQ, SEED = 8, 16, 2048, 250, 7
+    MULTS = (0.25, 0.4, 0.55, 0.7, 0.85, 1.0)
+    PCTS = ("p50", "p99")
+
+    def knee(points: List[dict], label: str) -> dict:
+        """Highest-goodput point with >= 0.9 attainment; if the mode
+        never attains 0.9 (colocated under balanced load), fall back to
+        its best-goodput point so the ratio compares peaks."""
+        ok = [p for p in points if p[label]["slo_attainment"] >= 0.9]
+        return max(ok or points, key=lambda p: p[label]["goodput_rps"])
+
+    frontier: dict = {}
+    ratios: dict = {}
+    for name in ("qwen3-1.7b", "mixtral-8x22b"):
+        cfg = get(name)
+        off = DecodeOffload(cfg, channels=16)
+        cost = HostCostModel(cfg)
+        probe = off.step(SLOTS)
+        step_costs = {SLOTS: (probe.pim_s, probe.h2d_bytes)}
+        step_s = probe.pim_s
+        # balance prefill vs decode work per request: prompt_len such
+        # that prefill_s(prompt) ~= max_new * step_s / slots
+        d_req = MAX_NEW * step_s / SLOTS
+        per_tok = cost.flops_per_token / cost.peak_flops
+        prompt = max(512, int(round(d_req / per_tok / 256)) * 256)
+        p_req = cost.prefill_s(prompt)
+        cap = 1.0 / max(p_req, d_req)       # disaggregated capacity
+        # TPOT budget: batched decode hands each request one token per
+        # full-batch step, so per-request TPOT ~= step_s (not /slots)
+        slo = SLO(ttft_s=4 * p_req, tpot_s=1.3 * step_s)
+        points: List[dict] = []
+        for mult in MULTS:
+            rate = mult * cap
+            tr = poisson_trace(rate, N_REQ, seed=SEED,
+                               prompt_len=prompt, max_new=MAX_NEW)
+            pt = {"load": mult, "rate_rps": round(rate, 4)}
+            for label, dis in (("disagg", True), ("colocated", False)):
+                srv = TrafficServer(off, slots=SLOTS, disaggregate=dis,
+                                    chunk_tokens=CHUNK, slo=slo,
+                                    step_costs=step_costs)
+                srv.run(tr)
+                s = srv.latency_summary()
+                pt[label] = {
+                    "goodput_rps": round(s["goodput_rps"], 4),
+                    "throughput_rps": round(s["throughput_rps"], 4),
+                    "slo_attainment": round(s["slo_attainment"], 4),
+                    **{f"ttft_{p}_s": round(s["ttft_s"][p], 4)
+                       for p in PCTS},
+                    **{f"tpot_{p}_s": round(s["tpot_s"][p], 4)
+                       for p in PCTS},
+                }
+            points.append(pt)
+        kd, kc = knee(points, "disagg"), knee(points, "colocated")
+        gp_d = kd["disagg"]["goodput_rps"]
+        gp_c = max(kc["colocated"]["goodput_rps"], 1e-12)
+        ratios[name] = gp_d / gp_c
+        frontier[name] = {
+            "prompt_len": prompt,
+            "max_new": MAX_NEW,
+            "slots": SLOTS,
+            "capacity_rps": round(cap, 4),
+            "slo": {"ttft_s": round(slo.ttft_s, 4),
+                    "tpot_s": round(slo.tpot_s, 4)},
+            "points": points,
+            "knee": {"disagg_load": kd["load"],
+                     "colocated_load": kc["load"],
+                     "disagg_goodput_rps": gp_d,
+                     "colocated_goodput_rps":
+                         kc["colocated"]["goodput_rps"],
+                     "goodput_ratio": round(ratios[name], 4)},
+        }
+        rows.append((f"serve/frontier_{name}", 0.0,
+                     f"knee disagg={gp_d:.3f}rps@x{kd['load']} "
+                     f"colo={kc['colocated']['goodput_rps']:.3f}rps"
+                     f"@x{kc['load']} ratio={ratios[name]:.2f}x "
+                     f"(gate >= 1.3x, {len(MULTS)} load points)"))
+    min_ratio = min(ratios.values())
+    assert min_ratio >= 1.3, ratios
+
+    # -- seed determinism: same trace, fresh servers, ==-equal summary --
+    cfg = get("qwen3-1.7b")
+    off = DecodeOffload(cfg, channels=16)
+    q = frontier["qwen3-1.7b"]
+    tr = poisson_trace(0.55 * q["capacity_rps"], N_REQ, seed=SEED,
+                       prompt_len=q["prompt_len"], max_new=MAX_NEW)
+    slo = SLO(**q["slo"])
+
+    def one_run() -> dict:
+        srv = TrafficServer(off, slots=SLOTS, disaggregate=True,
+                            chunk_tokens=CHUNK, slo=slo)
+        srv.run(tr)
+        return srv.latency_summary()
+
+    sa, sb = one_run(), one_run()
+    deterministic = sa == sb
+    assert deterministic, "seeded serving run diverged"
+    rows.append(("serve/seed_determinism", 0.0,
+                 f"two runs @0.55x load: ttft_p99={sa['ttft_s']['p99']:.3f}s "
+                 f"goodput={sa['goodput_rps']:.3f}rps identical=True"))
+
+    # -- zero-traffic additivity: the layer off is byte-free -------------
+    rcfg = get("qwen3-1.7b").reduced()
+
+    def decode_run(wrap: bool):
+        off = DecodeOffload(rcfg, channels=4, stacks=2)
+        if wrap:
+            srv = TrafficServer(off, slots=2)
+            srv.run(poisson_trace(1.0, 0, seed=0))
+        for _ in range(3):
+            off.step(2)
+        return (off.rt.stack.link,
+                [d.xfer.h2d_bytes for d in off.rt.stack],
+                [s.h2d_bytes for s in off.steps],
+                emit_trace(off.rt.stack))
+
+    bare, wrapped = decode_run(False), decode_run(True)
+    additive = bare == wrapped
+    assert additive, "idle traffic layer perturbed the offload"
+    rows.append(("serve/zero_traffic_additivity", 0.0,
+                 f"link==link h2d=={bare[1]} trace bytes identical "
+                 f"with traffic layer off"))
+
+    LAST_SERVE_METRICS.update(
+        frontier=frontier,
+        disagg_vs_colo_goodput=round(min_ratio, 4),
+        frontier_points=float(len(MULTS)),
+        seed_deterministic=float(deterministic),
+        zero_traffic_additive=float(additive))
+    return rows
+
+
 ALL = {
     "fig7": fig7_pep_cycles,
     "fig8": fig8_ame_instructions,
@@ -974,4 +1151,5 @@ ALL = {
     "obs": obs_sweep,
     "faults": faults_sweep,
     "kv": kv_sweep,
+    "serve": serve_sweep,
 }

@@ -18,10 +18,18 @@ schedule (open at https://ui.perfetto.dev), prints the critical-path
 attribution of the PIM makespan, and reports per-request TTFT/TPOT
 percentiles from the serve loop's metrics — see docs/observability.md.
 
+Request timestamps are stamped from a deterministic virtual clock by
+default (latency percentiles are simulated seconds, identical across
+runs and machines — see docs/serving.md); ``--wall`` restores
+``time.time()`` stamping.  ``--traffic RATE`` additionally replays a
+seeded Poisson arrival trace through the virtual-time ``TrafficServer``
+and prints disaggregated-vs-colocated goodput at an SLO.
+
   PYTHONPATH=src python examples/serve_lm.py [--requests 12] [--slots 4]
   PYTHONPATH=src python examples/serve_lm.py --pim-offload
   PYTHONPATH=src python examples/serve_lm.py --pim-offload --pim-numeric
   PYTHONPATH=src python examples/serve_lm.py --profile pim_profile.json
+  PYTHONPATH=src python examples/serve_lm.py --traffic 50
 """
 import argparse
 import time
@@ -52,6 +60,14 @@ def main():
                          "schedule here (implies --pim-offload in async "
                          "timeline mode) and report critical-path + "
                          "TTFT/TPOT latency metrics")
+    ap.add_argument("--wall", action="store_true",
+                    help="stamp request timestamps from time.time() "
+                         "instead of the deterministic virtual clock")
+    ap.add_argument("--traffic", type=float, metavar="RATE_RPS",
+                    default=None,
+                    help="also replay a seeded Poisson trace at RATE_RPS "
+                         "through the virtual-time TrafficServer and "
+                         "print disaggregated vs colocated goodput")
     args = ap.parse_args()
 
     cfg = get("qwen3-1.7b").reduced().replace(n_layers=4, d_model=256,
@@ -67,7 +83,7 @@ def main():
                             metrics=metrics) \
         if args.pim_offload or args.pim_numeric or args.profile else None
     srv = Server(cfg, params, slots=args.slots, cache_len=160,
-                 pim_offload=offload, metrics=metrics)
+                 pim_offload=offload, metrics=metrics, wall=args.wall)
 
     rng = np.random.default_rng(0)
     t0 = time.time()
@@ -83,8 +99,9 @@ def main():
     lat = [r.finished_at - r.submitted_at for r in done]
     print(f"served {len(done)} requests / {toks} tokens in {wall:.2f}s "
           f"({toks / wall:.1f} tok/s on CPU, slots={args.slots})")
-    print(f"latency p50={np.percentile(lat, 50):.2f}s "
-          f"p99={np.percentile(lat, 99):.2f}s")
+    unit = "wall" if args.wall else "virtual"
+    print(f"latency ({unit} seconds) p50={np.percentile(lat, 50):.4f}s "
+          f"p99={np.percentile(lat, 99):.4f}s")
     assert len(done) == args.requests
     if offload is not None:
         roof = offload.roofline()
@@ -120,6 +137,26 @@ def main():
               f"{lat_sum['tokens']} tokens]: "
               f"ttft p50={ttft['p50']:.3f}s p99={ttft['p99']:.3f}s | "
               f"tpot p50={tpot['p50']:.4f}s p99={tpot['p99']:.4f}s")
+    if args.traffic:
+        from repro.serve.loop import TrafficServer
+        from repro.serve.traffic import SLO, HostCostModel, poisson_trace
+        off = DecodeOffload(cfg, channels=args.pim_channels)
+        cost = HostCostModel(cfg)
+        step_s = off.step(args.slots).pim_s
+        slo = SLO(ttft_s=4 * cost.prefill_s(256), tpot_s=1.3 * step_s)
+        tr = poisson_trace(args.traffic, 200, seed=7, prompt_len=256,
+                           max_new=args.max_new)
+        print(f"traffic: 200 Poisson arrivals @ {args.traffic:.1f} rps, "
+              f"slo(ttft={slo.ttft_s:.4f}s tpot={slo.tpot_s:.5f}s)")
+        for label, dis in (("disaggregated", True), ("colocated", False)):
+            ts = TrafficServer(off, slots=args.slots, disaggregate=dis,
+                               chunk_tokens=64, slo=slo)
+            ts.run(tr)
+            s = ts.latency_summary()
+            print(f"  {label:13s}: goodput={s['goodput_rps']:8.2f} rps  "
+                  f"attainment={s['slo_attainment']:.2f}  "
+                  f"ttft_p99={s['ttft_s']['p99']:.4f}s  "
+                  f"tpot_p99={s['tpot_s']['p99']:.5f}s")
     print("serve_lm OK")
 
 

@@ -71,12 +71,17 @@ class HostLinkLedger:
     resident shards re-shipped / failover weight migration),
     ``"retry"`` (transient-corruption retransmits incl. backoff pause),
     and ``"degrade"`` (bandwidth-degradation windows; the count slot
-    carries the *extra cycles*, since no new bytes move).
+    carries the *extra cycles*, since no new bytes move).  The serving
+    simulator (:class:`repro.serve.loop.TrafficServer`) adds two
+    phase-contention kinds: ``"prefill"`` (host-prefilled KV handed off
+    to PIM-resident pages) and ``"acts"`` (per-decode-step activation
+    shipping) — the traffic disaggregation studies charge both as busy
+    windows on this same link so prefill and decode contend.
     """
 
     #: event kinds `charge` accepts (degrade goes through charge_raw
     #: only — its cycle cost is not a function of nbytes)
-    KINDS = ("xstack", "drain", "retry", "reupload")
+    KINDS = ("xstack", "drain", "retry", "reupload", "prefill", "acts")
 
     bytes: int = 0
     cycles: int = 0

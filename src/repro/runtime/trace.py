@@ -400,7 +400,8 @@ _CHANNEL_RE = re.compile(r"^# channel (\d+)$")
 _RESIDENT_RE = re.compile(r"^# RESIDENT (\d+) (\d+)$")
 _STACK_RE = re.compile(r"^# STACK (\d+)$")
 _HOSTLINK_RE = re.compile(
-    r"^# HOSTLINK (xstack|drain|retry|reupload|degrade) (\d+)$")
+    r"^# HOSTLINK (xstack|drain|retry|reupload|degrade|prefill|acts)"
+    r" (\d+)$")
 _SPILL_RE = re.compile(r"^# SPILL (\d+) (\d+)$")
 _KVAPPEND_RE = re.compile(r"^# KVAPPEND (\d+) (\d+)$")
 _KVEVICT_RE = re.compile(r"^# KVEVICT (\d+) (\d+)$")

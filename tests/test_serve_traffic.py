@@ -1,0 +1,410 @@
+"""Production-traffic serving under load (PR 9).
+
+Covers the traffic layer (:mod:`repro.serve.traffic`: virtual clocks,
+seeded Poisson/bursty arrival traces + the replayable JSON format, the
+host prefill cost model, SLOs, autoscaling policies), the virtual-time
+stamping of :class:`repro.serve.loop.Server`, and the disaggregated
+:class:`repro.serve.loop.TrafficServer` — prefill/decode phase layouts,
+host-link contention windows, admission control, autoscaling, SLO
+goodput accounting, and strict zero-traffic additivity.
+"""
+import dataclasses
+import json
+
+import numpy as np
+import pytest
+
+from repro.configs import get
+from repro.runtime.trace import emit_trace, parse_trace
+from repro.serve.loop import Request, Server, TrafficServer
+from repro.serve.offload import DecodeOffload
+from repro.serve.traffic import (
+    SLO,
+    HostCostModel,
+    QueueProportionalSlots,
+    SimClock,
+    SLOFeedbackSlots,
+    StaticSlots,
+    Trace,
+    TraceRequest,
+    WallClock,
+    bursty_trace,
+    poisson_trace,
+)
+
+RNG = np.random.default_rng(0)
+
+
+def _small():
+    return get("qwen3-1.7b").reduced()
+
+
+# ---------------------------------------------------------------------------
+# clocks
+# ---------------------------------------------------------------------------
+
+
+def test_sim_clock_monotonic():
+    c = SimClock()
+    assert c.now == 0.0
+    assert c.advance(1.5) == 1.5
+    assert c.advance_to(1.0) == 1.5      # no-op: already past
+    assert c.advance_to(3.0) == 3.0
+    with pytest.raises(ValueError):
+        c.advance(-0.1)
+
+
+def test_wall_clock_tracks_time():
+    import time
+    c = WallClock()
+    t0 = time.time()
+    c.advance(1e6)                       # a no-op: wall time is its own
+    assert abs(c.now - t0) < 5.0
+
+
+# ---------------------------------------------------------------------------
+# arrival traces
+# ---------------------------------------------------------------------------
+
+
+def test_poisson_trace_seeded_and_sorted():
+    a = poisson_trace(10.0, 200, seed=3)
+    b = poisson_trace(10.0, 200, seed=3)
+    assert a == b                        # same seed -> identical trace
+    assert a != poisson_trace(10.0, 200, seed=4)
+    ats = [r.at_s for r in a]
+    assert ats == sorted(ats)
+    assert len(a) == 200
+    # empirical rate within 25% of nominal at n=200
+    assert a.arrival_rate_rps == pytest.approx(10.0, rel=0.25)
+
+
+def test_bursty_trace_burstier_than_poisson():
+    def cv(tr):
+        gaps = np.diff([r.at_s for r in tr])
+        return gaps.std() / gaps.mean()
+
+    p = poisson_trace(5.0, 500, seed=1)
+    b = bursty_trace(5.0, 500, cv=3.0, seed=1)
+    assert cv(b) > 1.5 * cv(p)           # Gamma cv=3 vs Poisson cv=1
+    assert b.arrival_rate_rps == pytest.approx(5.0, rel=0.35)
+    assert b.meta["cv"] == 3.0
+
+
+def test_trace_lengths_ranges_and_validation():
+    tr = poisson_trace(2.0, 64, seed=5, prompt_len=(16, 64),
+                       max_new=(4, 8))
+    assert all(16 <= r.prompt_len <= 64 for r in tr)
+    assert all(4 <= r.max_new <= 8 for r in tr)
+    assert len({r.prompt_len for r in tr}) > 1
+    with pytest.raises(ValueError):
+        poisson_trace(0.0, 4)
+    with pytest.raises(ValueError):
+        bursty_trace(1.0, 4, cv=-1.0)
+
+
+def test_trace_save_load_round_trip(tmp_path):
+    tr = bursty_trace(3.0, 32, cv=2.0, seed=9, prompt_len=(8, 16))
+    path = tmp_path / "trace.json"
+    tr.save(str(path))
+    back = Trace.load(str(path))
+    assert back == tr
+    rec = json.loads(path.read_text())
+    assert rec["meta"]["kind"] == "bursty" and rec["meta"]["seed"] == 9
+
+
+# ---------------------------------------------------------------------------
+# host cost model, SLOs, autoscalers
+# ---------------------------------------------------------------------------
+
+
+def test_host_cost_model_rooflines():
+    cost = HostCostModel(get("qwen3-1.7b"))
+    assert cost.prefill_s(1) > 0         # weight read is a hard floor
+    assert cost.prefill_s(65536) > 4 * cost.prefill_s(64)
+    assert cost.kv_ship_bytes(100) == 100 * cost.kv_bytes_per_token
+    assert cost.decode_step_s(1) > 0
+
+
+def test_host_cost_model_generic_fallback():
+    class Odd:                           # family outside decode_matmuls
+        family = "ssm"
+        d_model, n_layers, vocab_size = 256, 4, 1000
+    cost = HostCostModel(Odd())
+    assert cost.weight_bytes > 0 and cost.flops_per_token > 0
+    assert cost.prefill_s(128) > 0
+
+
+def test_slo_met():
+    slo = SLO(ttft_s=1.0, tpot_s=0.1)
+    assert slo.met(0.5, 0.05)
+    assert slo.met(0.5, None)            # single-token: TTFT only
+    assert not slo.met(1.5, 0.05)
+    assert not slo.met(0.5, 0.2)
+
+
+def test_autoscaling_policies():
+    st = StaticSlots(slots=6)
+    assert st.target(queue_len=99, slots=2, live=0, recent_ttft=[]) == 6
+    qp = QueueProportionalSlots(min_slots=2, max_slots=8, per_queue=4)
+    assert qp.target(queue_len=0, slots=2, live=0, recent_ttft=[]) == 2
+    assert qp.target(queue_len=8, slots=2, live=0, recent_ttft=[]) == 4
+    assert qp.target(queue_len=999, slots=2, live=0, recent_ttft=[]) == 8
+    fb = SLOFeedbackSlots(SLO(ttft_s=1.0, tpot_s=0.1),
+                          min_slots=1, max_slots=4)
+    grow = fb.target(queue_len=1, slots=2, live=2, recent_ttft=[2.0])
+    assert grow == 3                     # tail violates -> +1
+    shrink = fb.target(queue_len=0, slots=2, live=1, recent_ttft=[0.2])
+    assert shrink == 1                   # comfortably inside -> -1
+    hold = fb.target(queue_len=0, slots=2, live=1, recent_ttft=[0.8])
+    assert hold == 2
+
+
+# ---------------------------------------------------------------------------
+# Request / Server virtual-time satellites
+# ---------------------------------------------------------------------------
+
+
+def test_request_eq_is_identity_not_ndarray():
+    a = Request(uid=1, prompt=np.zeros(4, np.int32))
+    b = Request(uid=1, prompt=np.zeros(4, np.int32))
+    assert a != b and a == a
+    assert a in [b, a]                   # no "truth value is ambiguous"
+
+
+def _xla_server(**kw):
+    import jax
+
+    from repro.models import model as lm
+
+    cfg = get("qwen3-1.7b").reduced().replace(n_layers=2, d_model=64,
+                                              d_ff=128, vocab_size=128)
+    params = lm.init(cfg, jax.random.PRNGKey(0))
+    off = DecodeOffload(cfg, channels=4, numeric=True, kv_offload=True)
+    return Server(cfg, params, cache_len=48, pim_offload=off, **kw), off
+
+
+def _drive(srv, n=3, max_new=4):
+    rng = np.random.default_rng(7)
+    for uid in range(n):
+        srv.submit(Request(uid=uid,
+                           prompt=rng.integers(1, 127, 6).astype(np.int32),
+                           max_new=max_new))
+    srv.run_until_drained()
+    return srv.latency_summary()
+
+
+def test_server_virtual_clock_deterministic():
+    sa = _drive(_xla_server(slots=2)[0])
+    sb = _drive(_xla_server(slots=2)[0])
+    assert sa == sb                      # virtual time: bit-identical
+    assert sa["ttft_s"]["count"] == 3 and sa["ttft_s"]["p50"] > 0
+    # every percentile block carries the serving tail + queue delay
+    for key in ("ttft_s", "tpot_s", "queue_delay_s"):
+        assert "p99.9" in sa[key], key
+    assert sa["queue_delay_s"]["max"] > 0    # 3 reqs through 2 slots
+
+
+def test_server_wall_escape_hatch():
+    import time
+    srv, _ = _xla_server(slots=2, wall=True)
+    t0 = time.time()
+    _drive(srv, n=1)
+    req = srv.completed[0]
+    assert t0 <= req.submitted_at <= req.first_token_at \
+        <= req.finished_at <= time.time()
+
+
+def test_serve_fault_kv_released_before_retry_prefill():
+    """Slot knock-out under load: the faulted request's paged KV must be
+    fully released before its retry re-prefills — no leaked pages, and
+    resident bytes return to baseline after the drain."""
+    srv, off = _xla_server(slots=2, faults="fail slot 0 @ iter 2")
+    assert off.kv.resident_kv_bytes == 0     # baseline
+    reprefilled_with_live_kv = []
+    orig = off.kv_prefill
+
+    def spy(rid, tokens, **kw):
+        if rid in off.kv._reqs:              # KV leaked across the retry
+            reprefilled_with_live_kv.append(rid)
+        return orig(rid, tokens, **kw)
+
+    off.kv_prefill = spy
+    rng = np.random.default_rng(11)
+    for uid in range(4):
+        srv.submit(Request(uid=uid,
+                           prompt=rng.integers(1, 127, 6).astype(np.int32),
+                           max_new=6))
+    srv.run_until_drained()
+    assert srv.retries_total >= 1            # the fault actually fired
+    assert len(srv.completed) == 4
+    assert reprefilled_with_live_kv == []
+    assert len(off.kv._reqs) == 0
+    assert off.kv.resident_kv_bytes == 0     # back to baseline
+
+
+# ---------------------------------------------------------------------------
+# TrafficServer: disaggregated virtual-time load serving
+# ---------------------------------------------------------------------------
+
+
+def _offload(**kw):
+    kw.setdefault("channels", 4)
+    return DecodeOffload(_small(), **kw)
+
+
+def test_traffic_server_drains_and_counts():
+    tr = poisson_trace(50.0, 40, seed=2, prompt_len=64, max_new=4)
+    srv = TrafficServer(_offload(), slots=4, chunk_tokens=32)
+    done = srv.run(tr)
+    assert len(done) == 40
+    s = srv.latency_summary()
+    assert s["requests"] == 40 and s["shed"] == 0
+    assert s["tokens"] == 40 * 4
+    assert s["throughput_rps"] > 0
+    assert s["link_prefill_bytes"] > 0       # KV handoffs crossed the link
+    assert s["link_acts_bytes"] > 0          # decode activations too
+    ts = [r.finished_at for r in done]
+    assert all(t > 0 for t in ts)
+
+
+def test_traffic_server_seed_deterministic():
+    def one():
+        srv = TrafficServer(_offload(), slots=4, chunk_tokens=32,
+                            slo=SLO(ttft_s=1.0, tpot_s=0.5))
+        srv.run(poisson_trace(30.0, 60, seed=6, prompt_len=64, max_new=4))
+        return srv.latency_summary()
+
+    assert one() == one()
+
+
+def test_disaggregated_beats_colocated():
+    """Balanced prefill/decode load at paper scale (the benchmark's
+    regime): the disaggregated layout overlaps the phases and must win
+    on goodput; colocated decode stalls behind prefill chunks (larger
+    worst inter-token gap)."""
+    off = DecodeOffload(get("qwen3-1.7b"), channels=16)
+    cost = HostCostModel(off.cfg)
+    slots, max_new = 8, 16
+    probe = off.step(slots)
+    costs = {slots: (probe.pim_s, probe.h2d_bytes)}
+    step_s = probe.pim_s
+    # prompt sized so prefill work ~ decode work per request
+    per_tok = cost.flops_per_token / cost.peak_flops
+    prompt = max(512, int(max_new * step_s / slots / per_tok))
+    slo = SLO(ttft_s=4 * cost.prefill_s(prompt), tpot_s=1.3 * step_s)
+    cap = 1.0 / max(cost.prefill_s(prompt), max_new * step_s / slots)
+    tr = poisson_trace(0.5 * cap, 80, seed=7, prompt_len=prompt,
+                       max_new=max_new)
+    res = {}
+    for label, dis in (("disagg", True), ("colo", False)):
+        srv = TrafficServer(off, slots=slots, disaggregate=dis,
+                            chunk_tokens=2048, slo=slo, step_costs=costs)
+        srv.run(tr)
+        res[label] = srv.latency_summary()
+    assert res["disagg"]["goodput_rps"] > res["colo"]["goodput_rps"]
+    assert res["disagg"]["max_decode_gap_s"] \
+        < res["colo"]["max_decode_gap_s"]
+
+
+def test_colocated_chunking_bounds_decode_stall():
+    """Smaller prefill chunks preempt less decode time per iteration:
+    the worst inter-token gap must shrink with the chunk size."""
+    off = _offload()
+    tr = poisson_trace(8.0, 40, seed=8, prompt_len=512, max_new=6)
+    gaps = {}
+    for chunk in (512, 64):
+        srv = TrafficServer(off, slots=4, disaggregate=False,
+                            chunk_tokens=chunk)
+        srv.run(tr)
+        gaps[chunk] = srv.latency_summary()["max_decode_gap_s"]
+    assert gaps[64] < gaps[512]
+
+
+def test_admission_control_sheds_under_overload():
+    off = _offload()
+    tr = poisson_trace(10_000.0, 80, seed=4, prompt_len=256, max_new=4)
+    srv = TrafficServer(off, slots=2, max_queue=8,
+                        slo=SLO(ttft_s=1e-6, tpot_s=1e-6))
+    srv.run(tr)
+    s = srv.latency_summary()
+    assert s["shed"] > 0
+    assert s["requests"] + s["shed"] == 80
+    assert len(srv.shed_requests) == s["shed"]
+    # shed arrivals count as SLO misses from the client's side
+    assert s["slo_attainment"] <= s["requests"] / 80
+
+
+def test_autoscaler_grows_slots_under_queue_pressure():
+    off = _offload()
+    tr = poisson_trace(5000.0, 60, seed=5, prompt_len=128, max_new=4)
+    srv = TrafficServer(off, slots=1, chunk_tokens=64,
+                        autoscale=QueueProportionalSlots(
+                            min_slots=1, max_slots=6, per_queue=4))
+    srv.run(tr)
+    assert srv.slots_max_seen > 1        # pressure grew the fleet
+    assert srv.slots_max_seen <= 6
+    assert len(srv.completed) == 60
+
+
+def test_slo_feedback_autoscaler_reacts():
+    off = _offload()
+    cost = HostCostModel(off.cfg)
+    slo = SLO(ttft_s=2 * cost.prefill_s(128), tpot_s=1.0)
+    tr = poisson_trace(100.0, 50, seed=3, prompt_len=128, max_new=4)
+    srv = TrafficServer(off, slots=1, chunk_tokens=64, slo=slo,
+                        autoscale=SLOFeedbackSlots(
+                            slo, min_slots=1, max_slots=8))
+    srv.run(tr)
+    assert srv.slots_max_seen > 1
+    assert len(srv.completed) == 50
+
+
+def test_zero_traffic_additivity():
+    """The traffic layer off must be byte-free: ==-equal link ledgers,
+    h2d ledgers, step records, and byte-identical traces."""
+    def run(wrap: bool):
+        off = DecodeOffload(_small(), channels=4, stacks=2)
+        if wrap:
+            srv = TrafficServer(off, slots=2)
+            srv.run(poisson_trace(1.0, 0, seed=0))
+        for _ in range(3):
+            off.step(2)
+        return (off.rt.stack.link,
+                [d.xfer.h2d_bytes for d in off.rt.stack],
+                [dataclasses.asdict(s) for s in off.steps],
+                emit_trace(off.rt.stack))
+
+    assert run(False) == run(True)
+
+
+def test_traffic_link_events_land_in_cluster_trace():
+    """On a multi-stack offload the handoff windows charge the cluster's
+    own ledger, so they serialize into its trace and parse back."""
+    off = DecodeOffload(_small(), channels=4, stacks=2)
+    srv = TrafficServer(off, slots=2, chunk_tokens=32)
+    srv.run(poisson_trace(20.0, 8, seed=1, prompt_len=64, max_new=3))
+    kinds = {k for k, _ in off.rt.stack.link.events}
+    assert {"prefill", "acts"} <= kinds
+    text = emit_trace(off.rt.stack)
+    assert "# HOSTLINK prefill" in text and "# HOSTLINK acts" in text
+    parse_trace(text)                    # round-trips without error
+
+
+def test_traffic_server_kv_lifecycle():
+    """With a kv_offload sidecar the handoff/release hooks run for real:
+    exact stepping is forced and resident KV returns to zero."""
+    off = DecodeOffload(_small(), channels=4, kv_offload=True)
+    srv = TrafficServer(off, slots=2, chunk_tokens=32)
+    assert not srv.cache_steps           # stateful KV -> exact stepping
+    srv.run(poisson_trace(20.0, 6, seed=2, prompt_len=16, max_new=3))
+    assert len(srv.completed) == 6
+    assert off.kv.resident_kv_bytes == 0
+    assert len(off.kv._reqs) == 0
+    assert off.kv.append_bytes > 0
+
+
+def test_traffic_server_rejects_async_offload():
+    off = DecodeOffload(_small(), channels=4, stacks=2, async_mode=True)
+    with pytest.raises(ValueError):
+        TrafficServer(off)

@@ -22,6 +22,7 @@ trajectory of the harness itself is tracked across PRs (CI's
   PYTHONPATH=src python -m benchmarks.run obs        # observability gates
   PYTHONPATH=src python -m benchmarks.run kv         # paged-KV attention
   PYTHONPATH=src python -m benchmarks.run serve      # SLO frontier sweep
+  PYTHONPATH=src python -m benchmarks.run moe        # routed expert parallel
   PYTHONPATH=src python -m benchmarks.run obs --out /tmp/bench.json
 """
 from __future__ import annotations
@@ -91,12 +92,13 @@ def write_bench_runtime(section_s: dict, out: Path = None) -> None:
     """
     from benchmarks.paper_figures import LAST_CLUSTER_METRICS, \
         LAST_DECODE_METRICS, LAST_ENGINE_METRICS, LAST_FAULTS_METRICS, \
-        LAST_KV_METRICS, LAST_OBS_METRICS, LAST_SERVE_METRICS
+        LAST_KV_METRICS, LAST_MOE_METRICS, LAST_OBS_METRICS, \
+        LAST_SERVE_METRICS
     out = Path(out) if out is not None else BENCH_RUNTIME
     out.parent.mkdir(parents=True, exist_ok=True)
     rec = {"generated_by": "benchmarks.run", "section_wall_s": {},
            "engine": {}, "cluster": {}, "decode": {}, "obs": {},
-           "faults": {}, "kv": {}, "serve": {}}
+           "faults": {}, "kv": {}, "serve": {}, "moe": {}}
     if out.exists():
         try:
             prev = json.load(open(out))
@@ -108,6 +110,7 @@ def write_bench_runtime(section_s: dict, out: Path = None) -> None:
             rec["faults"] = prev.get("faults", {})
             rec["kv"] = prev.get("kv", {})
             rec["serve"] = prev.get("serve", {})
+            rec["moe"] = prev.get("moe", {})
         except (OSError, ValueError):
             pass
     rec["section_wall_s"].update(
@@ -126,9 +129,10 @@ def write_bench_runtime(section_s: dict, out: Path = None) -> None:
                           for k, v in LAST_FAULTS_METRICS.items()})
     rec["kv"].update({k: round(v, 6)
                       for k, v in LAST_KV_METRICS.items()})
-    # serve merges unrounded: its "frontier" value is a nested
-    # per-config structure (already rounded at the leaves), not a scalar
+    # serve/moe merge unrounded: their "frontier"/"replication_sweep"
+    # values are nested structures (already rounded at the leaves)
     rec["serve"].update(LAST_SERVE_METRICS)
+    rec["moe"].update(LAST_MOE_METRICS)
     with open(out, "w") as f:
         json.dump(rec, f, indent=1, sort_keys=True)
         f.write("\n")

@@ -222,7 +222,11 @@ class FaultInjector:
         cluster = self.rt._cluster
         if cluster is not None and \
                 cluster.stack_of(survivor) != cluster.stack_of(ch):
-            cluster.link.charge("reupload", nbytes)
+            # switched topology attributes the migration to the
+            # destination stack's private link; shared falls through to
+            # the single ledger (link_for returns it unchanged)
+            cluster.link_for(cluster.stack_of(survivor)).charge(
+                "reupload", nbytes)
         self.count("replayed_outputs", 1)
         self.count("replayed_bytes", nbytes)
         self.count("replay_cycles", busy)
@@ -285,7 +289,10 @@ class FaultInjector:
         dev.events.append(("recover", nbytes))
         cluster = self.rt._cluster
         if cluster is not None:
-            cluster.link.charge("reupload", nbytes)
+            # charge the re-ship on the receiving stack's link (the
+            # shared ledger when link_topology="shared")
+            cluster.link_for(cluster.stack_of(dev.channel_id)).charge(
+                "reupload", nbytes)
         self.count("reupload_bytes", nbytes)
         self.instants.append(
             ("recover", self.now, dev.channel_id,

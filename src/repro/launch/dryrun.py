@@ -55,7 +55,11 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         compiled = lowered.compile()
         rec["compile_s"] = round(time.time() - t0, 2)
 
+        # modern jax returns a list of per-computation dicts (older
+        # releases returned the dict directly); normalize to one dict
         ca = compiled.cost_analysis() or {}
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0] if ca else {}
         rec["xla_flops_body_once"] = float(ca.get("flops", 0.0))
         ma = compiled.memory_analysis()
         rec["memory"] = {

@@ -106,6 +106,14 @@ def _summarize_trace(text: str) -> str:
             f"  kv markers: append_bytes={sum(st.kvappend_bytes.values())} "
             f"evict_bytes={sum(st.kvevict_bytes.values())} over "
             f"{len(set(st.kvappend_bytes) | set(st.kvevict_bytes))} channels")
+    if st.link_stacks_seen:
+        lines.append(
+            f"  stack links: {sorted(set(st.link_stacks_seen))} "
+            f"bytes_per_link={dict(st.host_link_bytes_per_link)}")
+    if st.migrate_events:
+        lines.append(
+            f"  migrate markers: {len(st.migrate_events)} events, "
+            f"{sum(m[4] for m in st.migrate_events)} bytes")
     return "\n".join(lines)
 
 

@@ -101,6 +101,11 @@ class HostLinkLedger:
     # plan must leave the ledger ==-equal to a bare one
     faults: Optional[object] = dataclasses.field(
         default=None, compare=False, repr=False)
+    # metric-name prefix: the shared link keeps "link"; a switched
+    # cluster labels its per-stack ledgers "link<s>".  Excluded from ==
+    # so labeled ledgers compare by traffic, not by name.
+    label: str = dataclasses.field(
+        default="link", compare=False, repr=False)
 
     def charge_raw(self, kind: str, nbytes: int, cyc: int) -> int:
         """Record one link event at an explicit cycle cost — the base
@@ -112,10 +117,10 @@ class HostLinkLedger:
         self.events.append((kind, nbytes))
         if self.metrics is not None:
             self.metrics.counter(
-                f"link.{kind}_bytes", unit="bytes",
+                f"{self.label}.{kind}_bytes", unit="bytes",
                 help=f"host-link bytes charged as {kind!r}").inc(nbytes)
             self.metrics.counter(
-                "link.cycles", unit="cycles",
+                f"{self.label}.cycles", unit="cycles",
                 help="host-link occupancy charged").inc(cyc)
         return cyc
 
@@ -140,13 +145,26 @@ class PIMCluster:
     """
 
     def __init__(self, stacks: int = 1, channels: int = PSEUDO_CHANNELS,
-                 capacity_bytes: Optional[int] = None):
+                 capacity_bytes: Optional[int] = None,
+                 link_topology: str = "shared"):
+        if link_topology not in ("shared", "switched"):
+            raise ValueError(f"unknown link_topology {link_topology!r} "
+                             f"(expected 'shared' or 'switched')")
         assert stacks >= 1, "a cluster has at least one stack"
         self.channels_per_stack = channels
+        self.link_topology = link_topology
         self.stacks = [PIMStack(channels, stack_id=s,
                                 capacity_bytes=capacity_bytes)
                        for s in range(stacks)]
         self.link = HostLinkLedger()
+        # "switched": one private link per stack behind a host-side
+        # switch; ``link`` remains the switch's host uplink for traffic
+        # with no single-stack attribution (serve-loop prefill/acts
+        # broadcast).  "shared" keeps the single ledger — bit-identical
+        # to the pre-topology model.
+        self.links: Optional[List[HostLinkLedger]] = (
+            [HostLinkLedger(label=f"link{s}") for s in range(stacks)]
+            if link_topology == "switched" else None)
 
     # -- addressing ----------------------------------------------------------
 
@@ -177,6 +195,29 @@ class PIMCluster:
         """Flat channel id of ``(stack, channel)``."""
         return stack * self.channels_per_stack + channel
 
+    # -- link topology -------------------------------------------------------
+
+    def all_links(self) -> List[HostLinkLedger]:
+        """Every ledger traffic can land on: the shared link (or switch
+        uplink) first, then the per-stack links (switched only)."""
+        return [self.link] + (self.links or [])
+
+    def link_for(self, stack: Optional[int]) -> HostLinkLedger:
+        """The ledger a transfer attributed to ``stack`` occupies:
+        the per-stack link under ``link_topology="switched"``, else (or
+        when the transfer has no single-stack attribution) the shared
+        link / switch uplink."""
+        if self.links is None or stack is None:
+            return self.link
+        return self.links[stack]
+
+    def link_totals(self) -> Tuple[int, int]:
+        """(bytes, cycles) summed over every link ledger — the figures
+        ``RuntimeReport.host_link_bytes/cycles`` report regardless of
+        topology."""
+        links = self.all_links()
+        return (sum(l.bytes for l in links), sum(l.cycles for l in links))
+
     # -- aggregates (mirror PIMStack's) --------------------------------------
 
     @property
@@ -202,4 +243,5 @@ class PIMCluster:
 
     def reset(self) -> None:
         cap = self.stacks[0].capacity_bytes
-        self.__init__(self.n_stacks, self.channels_per_stack, cap)
+        self.__init__(self.n_stacks, self.channels_per_stack, cap,
+                      link_topology=self.link_topology)

@@ -341,18 +341,22 @@ class PIMRuntime:
                  overlap: bool = True,
                  capacity_bytes: Optional[int] = None,
                  async_mode: bool = False,
+                 link_topology: str = "shared",
                  metrics=None, profile=None, faults=None):
         assert engine in ENGINE_MODES, engine
         if stack is not None:
-            if stacks != 1 or capacity_bytes is not None:
+            if stacks != 1 or capacity_bytes is not None \
+                    or link_topology != "shared":
                 raise ValueError(
-                    "stacks=/capacity_bytes= configure a runtime-built "
-                    "stack and are ignored with an explicit stack= — "
-                    "build the PIMCluster/PIMStack with them instead")
+                    "stacks=/capacity_bytes=/link_topology= configure a "
+                    "runtime-built stack and are ignored with an explicit "
+                    "stack= — build the PIMCluster/PIMStack with them "
+                    "instead")
             self.stack = stack
         elif stacks > 1:
             self.stack = PIMCluster(stacks, channels,
-                                    capacity_bytes=capacity_bytes)
+                                    capacity_bytes=capacity_bytes,
+                                    link_topology=link_topology)
         else:
             self.stack = PIMStack(channels, capacity_bytes=capacity_bytes)
         self.engine = engine
@@ -371,7 +375,8 @@ class PIMRuntime:
         # below runs at all when both stay None (the default)
         self.metrics = metrics
         if metrics is not None and self._cluster is not None:
-            self._cluster.link.metrics = metrics
+            for link in self._cluster.all_links():
+                link.metrics = metrics
         self.profile = None
         if profile:
             from repro.obs.profile import Profiler
@@ -386,7 +391,12 @@ class PIMRuntime:
             from repro.faults.plan import as_plan
             self.faults = FaultInjector(as_plan(faults), self)
             if self._cluster is not None:
-                self._cluster.link.faults = self.faults
+                # per-link routing: every ledger (shared/uplink and each
+                # per-stack link on a switched cluster) gets the hook, so
+                # retries/degradation land on the link that carried the
+                # bytes
+                for link in self._cluster.all_links():
+                    link.faults = self.faults
 
     # -- internals -----------------------------------------------------------
 
@@ -448,23 +458,58 @@ class PIMRuntime:
 
     def _link_charge_ship(self, key, stack_idx: int, nbytes: int,
                           link_seen: Dict) -> None:
-        """Charge the host link when an operand box crosses stacks: every
-        copy of the same box beyond its first stack's is inter-stack."""
+        """Charge the host link when an operand box crosses stacks.
+
+        Shared topology: every copy of the same box beyond its first
+        stack's is inter-stack — one ``xstack`` charge per extra
+        destination on the shared link.  Switched topology: the switch
+        *multicasts*, so a replicated box is read out of its source
+        stack once — one ``xstack`` charge on the source stack's link
+        when the first extra destination appears, further destinations
+        free.  ``link_seen`` tracks each box's destination stacks in
+        first-landed order across the op.
+        """
         if self._cluster is None:
             return
-        stacks = link_seen.setdefault(key, set())
-        if stacks and stack_idx not in stacks:
-            self._cluster.link.charge("xstack", nbytes)
-        stacks.add(stack_idx)
+        seen = link_seen.setdefault(key, [])
+        if seen and stack_idx not in seen:
+            if self._cluster.links is not None:
+                if len(seen) == 1:      # multicast: source reads out once
+                    self._cluster.link_for(seen[0]).charge("xstack", nbytes)
+            else:
+                self._cluster.link.charge("xstack", nbytes)
+        if stack_idx not in seen:
+            seen.append(stack_idx)
 
     def _record_instrs(self, dev: PIMDevice, n_before: int) -> None:
         for rec in dev.engine.instrs[n_before:]:
             dev.events.append(("instr", rec))
 
-    def _link_before(self) -> Tuple[int, int]:
+    def _link_before(self) -> Tuple:
+        """Pre-op link snapshot: (total bytes, total cycles) over every
+        link ledger, plus — switched topology only — the per-link cycle
+        clocks the async submit path splits its occupancy dict from."""
         if self._cluster is None:
-            return (0, 0)
-        return (self._cluster.link.bytes, self._cluster.link.cycles)
+            return (0, 0, None)
+        b, c = self._cluster.link_totals()
+        per = (tuple(l.cycles for l in self._cluster.all_links())
+               if self._cluster.links is not None else None)
+        return (b, c, per)
+
+    def _link_cycles_async(self, total_cycles: int, link_before: Tuple):
+        """The ``link_cycles`` argument for :meth:`Timeline.submit`: the
+        op's total link occupancy on a shared topology, or a
+        ``{stack|None: cycles}`` per-link delta dict on a switched one
+        (``None`` keys the switch uplink)."""
+        per_before = link_before[2] if len(link_before) > 2 else None
+        if per_before is None:
+            return total_cycles
+        delta = {}
+        for i, link in enumerate(self._cluster.all_links()):
+            d = link.cycles - per_before[i]
+            if d > 0:
+                delta[None if i == 0 else i - 1] = d
+        return delta
 
     def _op_devices(self, stack: Optional[int],
                     channels: Optional[Sequence[int]] = None
@@ -580,7 +625,7 @@ class PIMRuntime:
                        if self._cluster else 0),
                 spill_bytes=dev.spill_bytes - b.spill_bytes,
                 overlap=self.overlap))
-        lb, lc = self._link_before()
+        lb, lc = self._link_before()[:2]
         return RuntimeReport(
             op=op, shape=shape, placement=placement,
             channels=len(devs),       # == the decomposition width
@@ -729,7 +774,9 @@ class PIMRuntime:
                     for d in op_devs}
             self._submit_async(
                 "place", busy,
-                self._link_before()[1] - link_before[1], marks,
+                self._link_cycles_async(
+                    self._link_before()[1] - link_before[1], link_before),
+                marks,
                 reads=(), writes=(handle.uid,), after=None,
                 report=None, result=handle)
         elif self.profile is not None:
@@ -855,14 +902,16 @@ class PIMRuntime:
                         .append((s.stack, drained))
 
         # K-split reduction groups spanning stacks gather their partials
-        # over the shared host link: every partial from a non-home stack
-        # (home = the group's first-dispatched shard's stack) crosses it
+        # over the host link: every partial from a non-home stack (home =
+        # the group's first-dispatched shard's stack) crosses it — on a
+        # switched cluster, over the *sending* stack's own link (the
+        # partials are distinct data, so there is nothing to multicast)
         if self._cluster is not None:
             for parts in drain_groups.values():
                 home = parts[0][0]
                 for st, nbytes in parts:
                     if st != home:
-                        self._cluster.link.charge("drain", nbytes)
+                        self._cluster.link_for(st).charge("drain", nbytes)
 
         if execute:
             # host-side reduction of K-split partials, ascending-k FP16
@@ -885,7 +934,8 @@ class PIMRuntime:
             return self._submit_async(
                 "gemm",
                 {c.channel: c.busy_cycles for c in report.per_channel},
-                report.host_link_cycles, marks,
+                self._link_cycles_async(report.host_link_cycles,
+                                        link_before), marks,
                 reads=[h.uid for h in (ah, bh) if h is not None],
                 writes=(out_handle.uid,) if keep_output else (),
                 after=after, report=report, result=result)
@@ -1029,7 +1079,8 @@ class PIMRuntime:
             return self._submit_async(
                 f"ew-{kind}",
                 {cr.channel: cr.busy_cycles for cr in report.per_channel},
-                report.host_link_cycles, marks,
+                self._link_cycles_async(report.host_link_cycles,
+                                        link_before), marks,
                 reads=[h.uid for h in (ah, bh) if h is not None],
                 writes=(out_handle.uid,) if keep_output else (),
                 after=after, report=report, result=result)
@@ -1111,7 +1162,8 @@ class PIMRuntime:
             return self._submit_async(
                 "softmax",
                 {cr.channel: cr.busy_cycles for cr in report.per_channel},
-                report.host_link_cycles, marks,
+                self._link_cycles_async(report.host_link_cycles,
+                                        link_before), marks,
                 reads=(a.uid,), writes=(a.uid,),
                 after=after, report=report, result=a)
         if self.profile is not None:

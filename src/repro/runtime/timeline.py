@@ -101,10 +101,12 @@ class Timeline:
 
     @property
     def now(self) -> float:
-        """The frontier: max over every channel clock and the link clock."""
+        """The frontier: max over every channel clock and every link
+        clock (the shared link, plus each per-stack link when the
+        cluster runs ``link_topology="switched"``)."""
         t = max((d.tl_free for d in self.stack), default=0.0)
         if self.cluster is not None:
-            t = max(t, self.cluster.link.tl_free)
+            t = max(t, *(l.tl_free for l in self.cluster.all_links()))
         return t
 
     @property
@@ -120,22 +122,41 @@ class Timeline:
     # -- submission ----------------------------------------------------------
 
     def submit(self, name: str, channel_busy: Dict[int, float],
-               link_cycles: int = 0,
+               link_cycles=0,
                deps: Optional[List[OpHandle]] = None,
                report=None, result=None) -> OpHandle:
         """Place one op's busy intervals on the clocks.
 
         ``channel_busy`` maps flat channel id -> this op's busy cycles on
         that channel (zero-busy channels are dropped).  ``link_cycles``
-        is the op's host-link occupancy; its window opens no earlier than
-        the op's dependencies retire and the link is free, and dependent
-        shard starts wait for it.  Returns the :class:`OpHandle` whose
-        ``retire`` is what downstream ops wait on.
+        is the op's host-link occupancy — an int charged on the shared
+        link's clock, or (``link_topology="switched"``) a dict mapping
+        stack id -> cycles (``None`` = the switch uplink) charged on
+        each per-stack link's *own* clock, so disjoint-stack traffic
+        overlaps.  Every window opens no earlier than the op's
+        dependencies retire and its link is free, and dependent shard
+        starts wait for the earliest window.  Returns the
+        :class:`OpHandle` whose ``retire`` is what downstream ops wait
+        on.
         """
         deps = [d for d in (deps or []) if d is not None]
         ready = max((d.retire for d in deps), default=0.0)
         link_window = None
-        if link_cycles > 0:
+        if isinstance(link_cycles, dict):
+            windows = []
+            for key in sorted(link_cycles,
+                              key=lambda k: (k is None, k)):
+                cyc = link_cycles[key]
+                if cyc <= 0:
+                    continue
+                link = self.cluster.link_for(key)
+                ls = max(ready, link.tl_free)
+                link.tl_free = ls + cyc
+                windows.append((ls, ls + cyc))
+            if windows:
+                link_window = (min(w[0] for w in windows),
+                               max(w[1] for w in windows))
+        elif link_cycles > 0:
             link = self.cluster.link
             ls = max(ready, link.tl_free)
             link_window = (ls, ls + link_cycles)

@@ -36,6 +36,15 @@ tools skip them; :func:`parse_trace` round-trips them):
                                      fault-injection kinds retry |
                                      reupload | degrade — degrade's count
                                      slot carries extra cycles, not bytes)
+    # LINK <s>                    -- switched topology only: following
+                                     HOSTLINK lines belong to stack s's
+                                     private link (lines before any
+                                     # LINK are the switch uplink's)
+    # MIGRATE <layer> <expert> <src> <dst> <bytes>
+                                  -- routed-MoE expert migration: the
+                                     expert's weights moved src -> dst
+                                     stack (the matching reupload bytes
+                                     are HOSTLINK traffic)
     # SPILL <channel> <bytes>     -- residency evicted under a capacity
                                      bound (re-shipped on next use)
 
@@ -265,6 +274,13 @@ def _emit_device(lines: List[str], dev) -> None:
             # recovery landed here: the matching traffic is real MEM
             # lines (re-ship) or analytic busy time (output replay)
             lines.append(f"# RECOVER {dev.channel_id} {payload}")
+        elif kind == "migrate":
+            # routed-MoE expert migration landed on this (dst) stack:
+            # zero commands — the weight movement is the matching
+            # HOSTLINK reupload charge
+            layer, expert, src, dst, nbytes = payload
+            lines.append(
+                f"# MIGRATE {layer} {expert} {src} {dst} {nbytes}")
         elif kind == "instr":
             # whole-shard spans (the fast paths' aggregated records)
             # expand to the identical per-tile instruction sequence,
@@ -298,6 +314,14 @@ def emit_trace(stack) -> str:
     multi = len(stacks) > 1
     for kind, nbytes in stack.link.events:
         lines.append(f"# HOSTLINK {kind} {nbytes}")
+    # switched topology: each stack's private link gets its own marker
+    # section (shared topology has links=None and emits nothing extra,
+    # keeping the trace byte-identical to the pre-topology format)
+    for sid, ledger in enumerate(getattr(stack, "links", None) or ()):
+        if ledger.events:
+            lines.append(f"# LINK {sid}")
+            for kind, nbytes in ledger.events:
+                lines.append(f"# HOSTLINK {kind} {nbytes}")
     for sid, stk in enumerate(stacks):
         if multi:
             lines.append(f"# STACK {sid}")
@@ -378,6 +402,18 @@ class TraceStats:
     host_link_bytes: collections.Counter = dataclasses.field(
         default_factory=collections.Counter)       # per kind (xstack|drain)
     host_link_events: int = 0
+    # -- switched link topology: per-stack-link sections (# LINK s).
+    # ``link_stacks_seen`` records the section markers in order (empty on
+    # shared-topology traces); ``host_link_bytes_per_link`` attributes
+    # HOSTLINK bytes to the per-stack link they landed on (uplink bytes —
+    # those before any # LINK marker — stay out of it) ------------------
+    link_stacks_seen: List[int] = dataclasses.field(default_factory=list)
+    host_link_bytes_per_link: collections.Counter = dataclasses.field(
+        default_factory=collections.Counter)       # per stack link
+    # -- routed-MoE expert migrations: (layer, expert, src, dst, bytes)
+    # in marker order.  Empty unless a placement migration fired --------
+    migrate_events: List[Tuple[int, int, int, int, int]] = \
+        dataclasses.field(default_factory=list)
     # -- fault-injection markers (repro.faults): channel -> injection
     # cycle, and recovery bytes landed per channel.  Empty on fault-free
     # traces (the markers only exist when a fault actually fired) -------
@@ -402,6 +438,8 @@ _STACK_RE = re.compile(r"^# STACK (\d+)$")
 _HOSTLINK_RE = re.compile(
     r"^# HOSTLINK (xstack|drain|retry|reupload|degrade|prefill|acts)"
     r" (\d+)$")
+_LINK_RE = re.compile(r"^# LINK (\d+)$")
+_MIGRATE_RE = re.compile(r"^# MIGRATE (\d+) (\d+) (\d+) (\d+) (\d+)$")
 _SPILL_RE = re.compile(r"^# SPILL (\d+) (\d+)$")
 _KVAPPEND_RE = re.compile(r"^# KVAPPEND (\d+) (\d+)$")
 _KVEVICT_RE = re.compile(r"^# KVEVICT (\d+) (\d+)$")
@@ -421,6 +459,7 @@ def parse_trace(text: str) -> TraceStats:
     stats = TraceStats()
     channel = 0
     stack = 0
+    cur_link = None          # per-stack link section (None = uplink)
     for lineno, line in enumerate(text.splitlines(), 1):
         line = line.rstrip()
         if not line:
@@ -434,10 +473,23 @@ def parse_trace(text: str) -> TraceStats:
             stack = int(mm.group(1))
             stats.stacks_seen.append(stack)
             continue
+        mm = _LINK_RE.match(line)
+        if mm:
+            cur_link = int(mm.group(1))
+            stats.link_stacks_seen.append(cur_link)
+            continue
         mm = _HOSTLINK_RE.match(line)
         if mm:
             stats.host_link_events += 1
             stats.host_link_bytes[mm.group(1)] += int(mm.group(2))
+            if cur_link is not None:
+                stats.host_link_bytes_per_link[cur_link] += \
+                    int(mm.group(2))
+            continue
+        mm = _MIGRATE_RE.match(line)
+        if mm:
+            stats.migrate_events.append(tuple(int(g)
+                                              for g in mm.groups()))
             continue
         mm = _SPILL_RE.match(line)
         if mm:

@@ -617,6 +617,13 @@ class TrafficServer:
             self._step_costs[batch] = (rec.pim_s, rec.h2d_bytes)
         return self._step_costs[batch]
 
+    @property
+    def routing_observed(self):
+        """The offload's observed per-layer expert-selection histogram
+        (a :class:`~repro.serve.traffic.RoutingProfile`), or ``None``
+        when the offload is not routed (``routing=None``)."""
+        return self.off.observed
+
     # -- request lifecycle ----------------------------------------------------
 
     def _arrive(self, tr: TraceRequest) -> None:

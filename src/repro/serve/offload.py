@@ -61,11 +61,12 @@ so future changes to the cost model have a BENCH baseline to diff.
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 import functools
 import hashlib
 import json
-from typing import Dict, Hashable, List, Optional, Sequence, Tuple
+from typing import Dict, Hashable, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -81,7 +82,12 @@ from repro.runtime import (
     OpHandle,
     PIMRuntime,
 )
-from repro.sharding.rules import ame_pim_stack_map
+from repro.serve.traffic import RoutingProfile
+from repro.sharding.rules import (
+    ExpertPlacement,
+    ame_pim_expert_placement,
+    ame_pim_stack_map,
+)
 
 F16 = np.float16
 
@@ -405,7 +411,13 @@ class DecodeOffload:
                  engine: str = "batched", async_mode: bool = False,
                  split_batch: int = 1, metrics=None, faults=None,
                  kv_offload: bool = False,
-                 kv_capacity_bytes: Optional[int] = None):
+                 kv_capacity_bytes: Optional[int] = None,
+                 routing: Optional[RoutingProfile] = None,
+                 replicate_experts: int = 0,
+                 expert_placement: str = "greedy",
+                 migrate_threshold: Optional[float] = None,
+                 migrate_min_tokens: int = 256,
+                 link_topology: str = "shared"):
         self.cfg = cfg
         self.placement = placement
         self.numeric = numeric
@@ -413,6 +425,29 @@ class DecodeOffload:
         self.stacks = stacks
         self.seed = seed
         self.async_mode = async_mode
+        # -- routed-MoE expert parallelism (strictly additive when off:
+        # routing=None leaves every code path below byte-identical) --
+        self.routing = routing
+        self.replicate_experts = replicate_experts
+        self.expert_policy = expert_placement
+        self.migrate_threshold = migrate_threshold
+        self.migrate_min_tokens = migrate_min_tokens
+        if routing is not None:
+            if cfg.moe is None:
+                raise ValueError(
+                    "routing= models per-expert dispatch and requires an "
+                    f"MoE config, not {cfg.name!r}")
+            if async_mode or numeric:
+                raise ValueError(
+                    "routed-MoE dispatch is serialized accounting-only; "
+                    "async_mode=/numeric= are unsupported with routing=")
+            n_moe = cfg.n_layers - cfg.moe.first_dense_layers
+            if (routing.n_layers, routing.n_experts) != \
+                    (n_moe, cfg.moe.num_experts):
+                raise ValueError(
+                    f"routing profile is {routing.n_layers}x"
+                    f"{routing.n_experts}; {cfg.name} has {n_moe} MoE "
+                    f"layers x {cfg.moe.num_experts} experts")
         # repro.obs registry shared down into the runtime (per-op and
         # host-link streams land in the same registry as the per-step
         # offload.* metrics below); None = zero observability overhead
@@ -423,6 +458,7 @@ class DecodeOffload:
         self._split_batch = split_batch
         self.rt = PIMRuntime(channels=channels, stacks=stacks,
                              engine=engine, async_mode=async_mode,
+                             link_topology=link_topology,
                              metrics=metrics, faults=faults)
         self.matmuls = decode_matmuls(cfg)
         if numeric and self.weight_bytes > NUMERIC_MAX_WEIGHT_BYTES:
@@ -451,6 +487,12 @@ class DecodeOffload:
             self._build_async_plan(rng, layer_stacks)
         else:
             for m in self.matmuls:
+                if routing is not None and \
+                        m.name.startswith("moe.expert."):
+                    # routed mode homes expert weights per the skew-
+                    # driven placement (the bank below), not per-layer
+                    self.weights.append((m, []))
+                    continue
                 homes = [layer_stacks[ell]
                          for ell in self._family_layers(m)] \
                     if stacks > 1 else [None] * m.count
@@ -460,6 +502,32 @@ class DecodeOffload:
                         self._draw_weight(rng, m), placement=placement,
                         stack=home)))
                 self.weights.append((m, handles))
+        # -- routed-MoE expert bank / dispatch state ----------------------
+        #: [moe_layer][expert] -> [(home stack, (wi, wg?, wo) handles)],
+        #: primary home first (the ExpertPlacement homes order)
+        self.expert_bank: List[List[List[
+            Tuple[Optional[int], Tuple[DeviceTensor, ...]]]]] = []
+        #: [moe_layer] -> shared-expert handles on the layer's home stack
+        self.shared_bank: List[List[
+            Tuple[Optional[int], Tuple[DeviceTensor, ...]]]] = []
+        self._placement: Optional[ExpertPlacement] = None
+        self._placement_profile: Optional[RoutingProfile] = None
+        #: per-layer expert-selection histogram observed since the last
+        #: placement (what drift-triggered migration compares against)
+        self.observed: Optional[RoutingProfile] = None
+        self._route_rng = None
+        self.tokens_per_stack: List[int] = [0] * stacks
+        self.moe_counters: Dict[str, int] = {
+            "routed_tokens": 0, "replica_hits": 0, "migrations": 0}
+        if routing is not None:
+            self._placement = ame_pim_expert_placement(
+                routing, stacks, replicate=replicate_experts,
+                policy=expert_placement)
+            self._placement_profile = routing.copy()
+            self.observed = RoutingProfile.empty(
+                routing.n_layers, routing.n_experts)
+            self._route_rng = np.random.default_rng((seed, 32452867))
+            self._build_expert_bank()
         self.upload_bytes = sum(d.xfer.h2d_bytes for d in self.rt.stack)
         self.upload_bytes_per_stack: Optional[List[int]] = None
         if stacks > 1:
@@ -497,6 +565,310 @@ class DecodeOffload:
             return tuple(range(len(self.rt.stack)))
         cps = self.rt.stack.channels_per_stack
         return tuple(range(home * cps, (home + 1) * cps))
+
+    # -- routed-MoE expert parallelism (routing=) ----------------------------
+
+    def _expert_specs(self) -> List[Tuple[str, int, int]]:
+        """(name, out_dim, in_dim) of one routed expert's matmuls."""
+        moe, d = self.cfg.moe, self.cfg.d_model
+        specs = [("moe.expert.wi", moe.d_ff_expert, d)]
+        if self.cfg.act in ("swiglu", "geglu"):
+            specs.append(("moe.expert.wg", moe.d_ff_expert, d))
+        specs.append(("moe.expert.wo", d, moe.d_ff_expert))
+        return specs
+
+    @property
+    def expert_bytes(self) -> int:
+        """FP16 bytes of one expert's weights (a migration's payload)."""
+        return sum(o * i for _, o, i in self._expert_specs()) \
+            * BYTES_PER_ELEM
+
+    def _home_arg(self, home: Optional[int]) -> Optional[int]:
+        """The ``stack=`` argument for a placement home (single-stack
+        runtimes take None — there is no stack axis to restrict to)."""
+        return home if self.stacks > 1 else None
+
+    def _place_expert(self, home: Optional[int],
+                      specs: Sequence[Tuple[str, int, int]]
+                      ) -> Tuple[DeviceTensor, ...]:
+        """Place one expert's weight set resident on ``home``."""
+        return tuple(self.rt.place((o, i), placement=self.placement,
+                                   stack=self._home_arg(home))
+                     for _, o, i in specs)
+
+    def _build_expert_bank(self) -> None:
+        """Place every routed expert (replicas included) on its
+        :class:`~repro.sharding.rules.ExpertPlacement` homes, and the
+        shared experts on their layer's home stack."""
+        moe = self.cfg.moe
+        fd = moe.first_dense_layers
+        specs = self._expert_specs()
+        for li, homes_row in enumerate(self._placement.homes):
+            self.expert_bank.append(
+                [[(h, self._place_expert(h, specs)) for h in homes]
+                 for homes in homes_row])
+            layer_home = self.stack_map[fd + li] \
+                if self.stack_map is not None else None
+            self.shared_bank.append(
+                [(layer_home, self._place_expert(layer_home, specs))
+                 for _ in range(moe.n_shared)])
+
+    def set_routing(self, profile: RoutingProfile) -> None:
+        """Swap the live routing distribution (traffic drift) without
+        re-placing: subsequent steps sample from ``profile``, the
+        observed histogram drifts away from the placement's, and —
+        with ``migrate_threshold=`` set — :meth:`_maybe_migrate`
+        eventually re-places from the observed counts."""
+        if self.routing is None:
+            raise ValueError("set_routing requires a routed offload "
+                             "(construct with routing=)")
+        if (profile.n_layers, profile.n_experts) != \
+                (self.routing.n_layers, self.routing.n_experts):
+            raise ValueError(
+                f"profile shape {profile.n_layers}x{profile.n_experts} "
+                f"!= {self.routing.n_layers}x{self.routing.n_experts}")
+        self.routing = profile
+
+    def _sample_routes(self, li: int, batch: int
+                       ) -> List[Tuple[int, ...]]:
+        """Per-token expert selections for MoE layer ``li``: ``top_k``
+        distinct experts drawn from the live routing distribution.
+        Seeded at construction, so the route stream is a pure function
+        of (seed, step sequence)."""
+        probs = np.asarray(self.routing.probs(li), dtype=np.float64)
+        k = self.cfg.moe.top_k
+        if np.count_nonzero(probs) < k:
+            # degenerate histogram (fewer active experts than top_k):
+            # Laplace-smooth so replace=False stays drawable
+            probs = probs + 1.0 / probs.size
+        probs = probs / probs.sum()
+        return [tuple(int(e) for e in self._route_rng.choice(
+                    probs.size, size=k, replace=False, p=probs))
+                for _ in range(batch)]
+
+    def _routed_moe_step(self, batch: int) -> Tuple[float, int, int]:
+        """One decode step's routed expert sub-step.
+
+        Per MoE layer: sample each token's ``top_k`` experts, group the
+        tokens by expert, send each group to its expert's home stack —
+        a replicated expert's tokens split one-by-one to the
+        least-loaded home (by tokens assigned this layer) — and run the
+        expert GEMVs stack-restricted.  Stacks work *in parallel* within
+        a layer (expert parallelism), so the layer's cycle cost is the
+        max over stacks of their summed op makespans; layers serialize.
+        Cross-stack activation movement (tokens whose expert lives off
+        the layer's home stack) is charged on the host link as
+        ``xstack`` traffic — under ``link_topology="switched"`` the
+        hidden-state block leaves the source stack's link *once* and the
+        switch multicasts it, instead of once per destination.
+
+        Returns ``(cycles, flops, act_bytes)`` for the step record.
+        """
+        cfg, moe = self.cfg, self.cfg.moe
+        fd = moe.first_dense_layers
+        d_model = cfg.d_model
+        specs = self._expert_specs()
+        total_cycles = 0.0
+        flops = 0
+        act_bytes = 0
+        routed = hits = 0
+        for li in range(self.routing.n_layers):
+            layer_home = self.stack_map[fd + li] \
+                if self.stack_map is not None else None
+            groups: Dict[int, List[int]] = {}
+            for t, experts in enumerate(self._sample_routes(li, batch)):
+                for e in experts:
+                    groups.setdefault(e, []).append(t)
+            counts = {e: len(ts) for e, ts in groups.items()}
+            # two-pass dispatch: single-home experts are fixed load, so
+            # land them first; replicated experts' tokens then valley-
+            # fill, one by one, onto the least-loaded replica home
+            # (largest group first — the hottest expert has the most
+            # freedom to level the stacks)
+            load: collections.Counter = collections.Counter()
+            assign: Dict[Tuple[int, Optional[int]],
+                         Tuple[Tuple[DeviceTensor, ...], List[int]]] = {}
+
+            def _put(e: int, home: Optional[int], t: int) -> None:
+                load[home] += 1
+                entry = assign.get((e, home))
+                if entry is None:
+                    entry = assign[(e, home)] = (
+                        next(hs for h, hs in self.expert_bank[li][e]
+                             if h == home), [])
+                entry[1].append(t)
+
+            flex: List[Tuple[int, List[int]]] = []
+            for e in sorted(groups):
+                bank = self.expert_bank[li][e]
+                if len(bank) == 1:
+                    for t in groups[e]:
+                        _put(e, bank[0][0], t)
+                else:
+                    flex.append((e, groups[e]))
+            # fewest-homes first: the widest-replicated (hottest) group
+            # dispatches last, when it has full sight of the valleys
+            for e, toks in sorted(
+                    flex, key=lambda et: (len(self.expert_bank[li][et[0]]),
+                                          -len(et[1]), et[0])):
+                bank = self.expert_bank[li][e]
+                for t in toks:
+                    home = min((h for h, _ in bank),
+                               key=lambda h: (load[h], h))
+                    if home != bank[0][0]:
+                        hits += 1
+                    _put(e, home, t)
+            self.observed.record_counts(li, counts)
+            routed += sum(counts.values())
+            stack_cycles: collections.Counter = collections.Counter()
+            for (e, home), (handles, toks) in sorted(assign.items()):
+                nt = len(toks)
+                for (_, _, in_dim), h in zip(specs, handles):
+                    x = self._activation(in_dim, nt)
+                    _, rep = self.rt.gemm(h, x, placement=self.placement,
+                                          execute=False,
+                                          stack=self._home_arg(home))
+                    stack_cycles[home] += rep.makespan_cycles
+                    flops += rep.total_flops
+                    act_bytes += in_dim * nt * BYTES_PER_ELEM
+                self.tokens_per_stack[home or 0] += nt
+            # shared experts run every token on the layer's home stack
+            for home, handles in self.shared_bank[li]:
+                for (_, _, in_dim), h in zip(specs, handles):
+                    x = self._activation(in_dim, batch)
+                    _, rep = self.rt.gemm(h, x, placement=self.placement,
+                                          execute=False,
+                                          stack=self._home_arg(home))
+                    stack_cycles[home] += rep.makespan_cycles
+                    flops += rep.total_flops
+                    act_bytes += in_dim * batch * BYTES_PER_ELEM
+            if self.stacks > 1:
+                dest_tokens: Dict[int, Set[int]] = {}
+                for (e, home), (_, toks) in assign.items():
+                    if home != layer_home:
+                        dest_tokens.setdefault(home, set()).update(toks)
+                if dest_tokens:
+                    cluster = self.rt.stack
+                    if cluster.links is not None:
+                        # multicast: the hidden-state block is read out
+                        # of the source stack's link once; the switch
+                        # fans it out to every destination
+                        union: Set[int] = set()
+                        for s in dest_tokens.values():
+                            union |= s
+                        cluster.link_for(layer_home).charge(
+                            "xstack",
+                            d_model * len(union) * BYTES_PER_ELEM)
+                    else:
+                        for dst in sorted(dest_tokens):
+                            cluster.link.charge(
+                                "xstack", d_model * len(dest_tokens[dst])
+                                * BYTES_PER_ELEM)
+            total_cycles += max(stack_cycles.values(), default=0.0)
+        self.moe_counters["routed_tokens"] += routed
+        self.moe_counters["replica_hits"] += hits
+        if self.metrics is not None:
+            m = self.metrics
+            m.counter("moe.routed_tokens", unit="tokens",
+                      help="expert-token assignments dispatched by the "
+                           "routed-MoE layer").inc(routed)
+            m.counter("moe.replica_hits", unit="tokens",
+                      help="routed tokens served by a non-primary "
+                           "expert replica").inc(hits)
+            for s, v in enumerate(self.tokens_per_stack):
+                m.gauge(f"moe.tokens_stack{s}", unit="tokens",
+                        help="cumulative routed expert-tokens "
+                             "dispatched to this stack").set(v)
+        return total_cycles, flops, act_bytes
+
+    def _maybe_migrate(self) -> None:
+        """Step-boundary expert migration: when the observed routing
+        histogram has drifted past ``migrate_threshold`` (total-
+        variation distance, max over layers) from the profile the
+        current placement was computed from, re-place from the observed
+        counts.  Experts whose home set changed get their weights placed
+        on the added homes (charged as ``reupload`` on the destination
+        stack's link, marked ``# MIGRATE`` in the trace) and evicted
+        from the removed ones; unchanged homes keep their resident
+        handles — no traffic."""
+        if self.routing is None or self.migrate_threshold is None:
+            return
+        if self.observed.total_tokens < self.migrate_min_tokens:
+            return
+        if self.observed.drift(self._placement_profile) \
+                <= self.migrate_threshold:
+            return
+        new = ame_pim_expert_placement(
+            self.observed, self.stacks, replicate=self.replicate_experts,
+            policy=self.expert_policy)
+        specs = self._expert_specs()
+        ebytes = self.expert_bytes
+        fd = self.cfg.moe.first_dense_layers
+        cluster = self.rt._cluster
+        moved = 0
+        for li, row in enumerate(new.homes):
+            for e, homes in enumerate(row):
+                old = self.expert_bank[li][e]
+                if list(homes) == [h for h, _ in old]:
+                    continue
+                src = old[0][0]
+                keep = dict(old)
+                bank = []
+                for h in homes:
+                    if h in keep:
+                        bank.append((h, keep.pop(h)))
+                        continue
+                    bank.append((h, self._place_expert(h, specs)))
+                    moved += 1
+                    if cluster is not None:
+                        cluster.link_for(h).charge("reupload", ebytes)
+                        dev = cluster.device(h, 0)
+                    else:
+                        dev = self.rt.stack.devices[0]
+                    dev.events.append(
+                        ("migrate", (fd + li, e, src or 0, h or 0,
+                                     ebytes)))
+                for handles in keep.values():
+                    for h2 in handles:
+                        h2.evict()
+                self.expert_bank[li][e] = bank
+        self._placement = new
+        self._placement_profile = self.observed.copy()
+        self.observed = RoutingProfile.empty(
+            self.observed.n_layers, self.observed.n_experts)
+        if moved:
+            self.moe_counters["migrations"] += moved
+            if self.metrics is not None:
+                self.metrics.counter(
+                    "moe.migrations", unit="experts",
+                    help="expert replica homes moved by drift-triggered "
+                         "re-placement").inc(moved)
+
+    @property
+    def replica_hit_rate(self) -> float:
+        """Fraction of routed tokens a non-primary replica absorbed."""
+        tot = self.moe_counters["routed_tokens"]
+        return self.moe_counters["replica_hits"] / tot if tot else 0.0
+
+    def moe_summary(self) -> Dict:
+        """Routed-MoE dispatch summary (the bench-facing view)."""
+        toks = self.tokens_per_stack
+        mean = sum(toks) / len(toks) if toks else 0.0
+        return {
+            "policy": self.expert_policy,
+            "replicate": self.replicate_experts,
+            "stacks": self.stacks,
+            "routed_tokens": self.moe_counters["routed_tokens"],
+            "replica_hits": self.moe_counters["replica_hits"],
+            "replica_hit_rate": self.replica_hit_rate,
+            "migrations": self.moe_counters["migrations"],
+            "tokens_per_stack": list(toks),
+            "observed_max_over_mean":
+                (max(toks) / mean) if mean else 1.0,
+            "placement_max_over_mean": self._placement.max_over_mean,
+            "placement_worst_layer_max_over_mean":
+                self._placement.worst_layer_max_over_mean,
+        }
 
     # -- KV-resident attention (kv_offload=True) -----------------------------
 
@@ -962,6 +1334,7 @@ class DecodeOffload:
         """
         from repro.faults.injector import NoHealthyChannelsError
         self._maybe_failover()
+        self._maybe_migrate()
         try:
             return self._step_once(batch, request_ids)
         except NoHealthyChannelsError:
@@ -1037,6 +1410,10 @@ class DecodeOffload:
                             for m in self.matmuls)
         else:
             for m, handles in self.weights:
+                if not handles:
+                    # routed mode: expert families dispatch through the
+                    # placement bank (_routed_moe_step), not here
+                    continue
                 x = self._activation(m.in_dim, batch)
                 for home, h in handles:
                     y, rep = self.rt.gemm(h, x, placement=self.placement,
@@ -1049,6 +1426,14 @@ class DecodeOffload:
                         max_err = max(max_err, err)
                         logits_err = max(logits_err, lerr)
                 act_bytes += m.in_dim * batch * BYTES_PER_ELEM * m.count
+            if self.routing is not None:
+                # routed expert sub-step: per layer, stacks run their
+                # expert groups in parallel (max over stacks), layers
+                # serialize like ops
+                cyc, fl, ab = self._routed_moe_step(batch)
+                pim_cycles += cyc
+                flops += fl
+                act_bytes += ab
             for rid in rids:
                 cyc, fl, err = self._attention_serialized(rid)
                 attn_cycles += cyc
@@ -1207,7 +1592,7 @@ class DecodeOffload:
         assert self.steps, "run at least one step first"
         peak = max(s.batch for s in self.steps)
         steady = [s for s in self.steps if s.batch == peak][-1]
-        return {
+        out = {
             "arch": self.cfg.name,
             # the per-op decomposition width (channels per stack) — every
             # op is stack-restricted, so this, not stacks*channels, is
@@ -1216,7 +1601,7 @@ class DecodeOffload:
                          else self.rt.stack.channels_per_stack),
             "stacks": self.stacks,
             "upload_bytes_per_stack": self.upload_bytes_per_stack,
-            "host_link_bytes": (self.rt.stack.link.bytes
+            "host_link_bytes": (self.rt.stack.link_totals()[0]
                                 if self.stacks > 1 else 0),
             "placement": self.placement,
             "matmuls_per_step": sum(m.count for m in self.matmuls),
@@ -1234,6 +1619,9 @@ class DecodeOffload:
             "kv": self.kv.summary() if self.kv is not None else None,
             "steps": [s.to_json() for s in self.steps],
         }
+        if self.routing is not None:
+            out["moe"] = self.moe_summary()
+        return out
 
     def dump(self, path: str) -> Dict:
         """Write the roofline trajectory as JSON (the BENCH artifact)."""

@@ -19,6 +19,13 @@ study needs, all deterministic and machine-independent:
   loads the replayable JSON format so a sweep can pin its exact
   workload in the repo.
 
+* **MoE routing histograms** — :class:`RoutingProfile` records (or
+  synthesizes: :func:`zipf_routing`, :func:`uniform_routing`) per-layer
+  expert-selection counts, seeded and replayable; it drives the
+  routed-traffic-aware expert placement in :mod:`repro.sharding.rules`
+  and the :class:`repro.serve.offload.DecodeOffload` routed decode
+  dispatch.
+
 * **Host cost model** — :class:`HostCostModel` prices the two phases a
   disaggregated server schedules: prefill on the host XLA device (a
   roofline over the decode matmul set, same ``hw.PEAK_FLOPS`` /
@@ -210,6 +217,155 @@ def bursty_trace(rate_rps: float, n: int, *, cv: float = 3.0, seed: int = 0,
     gaps = rng.gamma(shape, scale, size=n)
     return _build(gaps, n, seed, "bursty", rate_rps, prompt_len, max_new,
                   rng, extra={"cv": cv})
+
+
+# ---------------------------------------------------------------------------
+# MoE routing histograms
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class RoutingProfile:
+    """Per-layer MoE expert-selection histogram: ``counts[layer][expert]``
+    routed-token assignments (each decoded token contributes ``top_k``
+    selections per MoE layer).
+
+    This is the currency of routed-traffic-aware placement: generators
+    below synthesize seeded skew (:func:`zipf_routing`,
+    :func:`uniform_routing`), :class:`repro.serve.offload.DecodeOffload`
+    *records* its observed selections into one (trace replay), and
+    :func:`repro.sharding.rules.ame_pim_expert_placement` consumes one
+    to balance expected token mass over stacks.  ``save``/``load``
+    round-trip through JSON with field equality, same as :class:`Trace`.
+    """
+
+    n_layers: int               # MoE layers only (dense layers excluded)
+    n_experts: int
+    counts: List[List[int]]
+    meta: Dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self):
+        if len(self.counts) != self.n_layers or any(
+                len(row) != self.n_experts for row in self.counts):
+            raise ValueError(
+                f"counts must be {self.n_layers} x {self.n_experts}")
+
+    @classmethod
+    def empty(cls, n_layers: int, n_experts: int,
+              meta: Optional[Dict] = None) -> "RoutingProfile":
+        return cls(n_layers, n_experts,
+                   [[0] * n_experts for _ in range(n_layers)],
+                   meta=dict(meta or {}))
+
+    # -- recording (trace replay) -------------------------------------------
+
+    def record(self, layer: int, expert: int, tokens: int = 1) -> None:
+        self.counts[layer][expert] += int(tokens)
+
+    def record_counts(self, layer: int, sel: Dict[int, int]) -> None:
+        row = self.counts[layer]
+        for expert, tokens in sel.items():
+            row[expert] += int(tokens)
+
+    # -- views ---------------------------------------------------------------
+
+    @property
+    def total_tokens(self) -> int:
+        return sum(sum(row) for row in self.counts)
+
+    def layer_total(self, layer: int) -> int:
+        return sum(self.counts[layer])
+
+    def probs(self, layer: int) -> List[float]:
+        """Selection probabilities for one layer (uniform when the layer
+        has recorded nothing — an empty histogram routes like one)."""
+        total = self.layer_total(layer)
+        if total <= 0:
+            return [1.0 / self.n_experts] * self.n_experts
+        return [c / total for c in self.counts[layer]]
+
+    def expert_mass(self) -> List[int]:
+        """Per-expert token mass summed over layers."""
+        return [sum(row[e] for row in self.counts)
+                for e in range(self.n_experts)]
+
+    def drift(self, other: "RoutingProfile") -> float:
+        """Max over layers of the total-variation distance between the
+        two normalized histograms (0 = identical mix, 1 = disjoint).
+        Layers empty on either side are skipped — no evidence yet."""
+        if (self.n_layers, self.n_experts) != (other.n_layers,
+                                               other.n_experts):
+            raise ValueError("profiles have different shapes")
+        worst = 0.0
+        for layer in range(self.n_layers):
+            if self.layer_total(layer) <= 0 or other.layer_total(layer) <= 0:
+                continue
+            p, q = self.probs(layer), other.probs(layer)
+            worst = max(worst, 0.5 * sum(abs(a - b) for a, b in zip(p, q)))
+        return worst
+
+    def copy(self) -> "RoutingProfile":
+        return RoutingProfile(self.n_layers, self.n_experts,
+                              [list(row) for row in self.counts],
+                              meta=dict(self.meta))
+
+    # -- persistence ---------------------------------------------------------
+
+    def save(self, path: str) -> None:
+        rec = {"n_layers": self.n_layers, "n_experts": self.n_experts,
+               "counts": self.counts, "meta": self.meta}
+        with open(path, "w") as f:
+            json.dump(rec, f, indent=1, sort_keys=True)
+            f.write("\n")
+
+    @classmethod
+    def load(cls, path: str) -> "RoutingProfile":
+        with open(path) as f:
+            rec = json.load(f)
+        return cls(n_layers=rec["n_layers"], n_experts=rec["n_experts"],
+                   counts=[list(row) for row in rec["counts"]],
+                   meta=rec.get("meta", {}))
+
+
+def uniform_routing(n_layers: int, n_experts: int, tokens_per_layer: int,
+                    *, seed: int = 0) -> RoutingProfile:
+    """Seeded uniform routing: ``tokens_per_layer`` multinomial draws per
+    layer with equal expert probabilities — the no-skew baseline."""
+    import numpy as np
+    rng = np.random.default_rng((15485863, seed))   # domain-separated seed
+    counts = [list(map(int, rng.multinomial(
+        tokens_per_layer, [1.0 / n_experts] * n_experts)))
+        for _ in range(n_layers)]
+    return RoutingProfile(n_layers, n_experts, counts,
+                          meta={"kind": "uniform", "seed": seed,
+                                "tokens_per_layer": tokens_per_layer})
+
+
+def zipf_routing(n_layers: int, n_experts: int, tokens_per_layer: int,
+                 *, alpha: float = 1.0, seed: int = 0) -> RoutingProfile:
+    """Seeded Zipf-skewed routing: expert selection probabilities fall as
+    ``1 / rank^alpha``, with an independent per-layer permutation mapping
+    ranks to expert ids (hot experts differ layer to layer, as measured
+    routed traffic does).  ``alpha=1.0`` reproduces the heavy skew the
+    Mixtral/DeepSeek-V3 reports describe."""
+    import numpy as np
+    if alpha < 0:
+        raise ValueError(f"alpha must be >= 0, got {alpha}")
+    rng = np.random.default_rng((86028157, seed))   # domain-separated seed
+    weights = [1.0 / (r + 1) ** alpha for r in range(n_experts)]
+    total = sum(weights)
+    probs = [w / total for w in weights]
+    counts = []
+    for _ in range(n_layers):
+        perm = rng.permutation(n_experts)
+        ranked = rng.multinomial(tokens_per_layer, probs)
+        row = [0] * n_experts
+        for rank, expert in enumerate(perm):
+            row[int(expert)] = int(ranked[rank])
+        counts.append(row)
+    return RoutingProfile(n_layers, n_experts, counts,
+                          meta={"kind": "zipf", "alpha": alpha, "seed": seed,
+                                "tokens_per_layer": tokens_per_layer})
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,334 @@
+"""Routed-traffic-aware MoE expert parallelism (PR 10).
+
+Covers the routing-histogram currency (:class:`repro.serve.traffic.
+RoutingProfile` + seeded Zipf/uniform generators), the skew-driven
+placer (:func:`repro.sharding.rules.ame_pim_expert_placement`:
+greedy token balancing, mass-proportional hot-expert replication,
+round-robin baseline), the routed :class:`repro.serve.offload.
+DecodeOffload` (per-expert dispatch, replica selection, drift-driven
+migration), and the per-stack switched link topology (multicast
+charging, ``# LINK`` / ``# MIGRATE`` trace round-trips, strict
+additivity of the default shared topology).
+"""
+import dataclasses
+
+import pytest
+
+from repro.configs import get
+from repro.obs.metrics import MetricsRegistry
+from repro.runtime.trace import emit_trace, parse_trace
+from repro.serve.offload import DecodeOffload
+from repro.serve.traffic import RoutingProfile, uniform_routing, zipf_routing
+from repro.sharding.rules import (
+    ame_pim_expert_placement,
+    ame_pim_stack_map,
+)
+
+
+def _reduced_moe():
+    return get("mixtral-8x22b").reduced()
+
+
+def _profile(cfg, tokens=512, seed=3, alpha=1.0):
+    n_moe = cfg.n_layers - cfg.moe.first_dense_layers
+    return zipf_routing(n_moe, cfg.moe.num_experts, tokens,
+                        alpha=alpha, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# RoutingProfile
+# ---------------------------------------------------------------------------
+
+def test_routing_generators_deterministic():
+    a = zipf_routing(4, 8, 1000, alpha=1.0, seed=5)
+    b = zipf_routing(4, 8, 1000, alpha=1.0, seed=5)
+    assert a.counts == b.counts and a.meta == b.meta
+    c = zipf_routing(4, 8, 1000, alpha=1.0, seed=6)
+    assert a.counts != c.counts
+    u1 = uniform_routing(4, 8, 1000, seed=5)
+    u2 = uniform_routing(4, 8, 1000, seed=5)
+    assert u1.counts == u2.counts
+    assert all(sum(row) == 1000 for row in a.counts)
+
+
+def test_zipf_is_skewed_uniform_is_not():
+    z = zipf_routing(6, 8, 4000, alpha=1.0, seed=1)
+    u = uniform_routing(6, 8, 4000, seed=1)
+    zmax = max(max(row) for row in z.counts)
+    umax = max(max(row) for row in u.counts)
+    assert zmax > 2 * umax  # rank-1 expert draws ~37% vs ~12.5%
+
+
+def test_routing_profile_save_load_roundtrip(tmp_path):
+    p = zipf_routing(3, 4, 256, seed=9)
+    path = tmp_path / "routing.json"
+    p.save(str(path))
+    q = RoutingProfile.load(str(path))
+    assert (q.n_layers, q.n_experts) == (p.n_layers, p.n_experts)
+    assert q.counts == p.counts and q.meta == p.meta
+
+
+def test_routing_profile_record_and_probs():
+    p = RoutingProfile.empty(2, 4)
+    assert p.probs(0) == [0.25] * 4          # empty layer routes uniformly
+    p.record(0, 1, 3)
+    p.record_counts(0, {1: 1, 2: 4})
+    assert p.counts[0] == [0, 4, 4, 0]
+    assert p.layer_total(0) == 8 and p.total_tokens == 8
+    assert p.probs(0) == [0.0, 0.5, 0.5, 0.0]
+    assert p.expert_mass() == [0, 4, 4, 0]
+
+
+def test_routing_profile_drift():
+    a = RoutingProfile(1, 2, [[8, 0]])
+    b = RoutingProfile(1, 2, [[0, 8]])
+    assert a.drift(a.copy()) == 0.0
+    assert a.drift(b) == 1.0
+    empty = RoutingProfile.empty(1, 2)
+    assert a.drift(empty) == 0.0             # no evidence -> no drift
+    with pytest.raises(ValueError):
+        a.drift(RoutingProfile.empty(1, 3))
+
+
+def test_routing_profile_shape_validation():
+    with pytest.raises(ValueError):
+        RoutingProfile(2, 2, [[1, 2]])
+    with pytest.raises(ValueError):
+        RoutingProfile(1, 2, [[1, 2, 3]])
+
+
+# ---------------------------------------------------------------------------
+# Skew-driven placement
+# ---------------------------------------------------------------------------
+
+def test_placement_deterministic():
+    prof = zipf_routing(6, 8, 2048, seed=4)
+    a = ame_pim_expert_placement(prof, 4, replicate=2)
+    b = ame_pim_expert_placement(prof, 4, replicate=2)
+    assert a == b                            # frozen dataclass, tuple fields
+
+
+def test_greedy_beats_roundrobin_balance():
+    prof = zipf_routing(8, 8, 4096, alpha=1.0, seed=3)
+    rr = ame_pim_expert_placement(prof, 4, policy="roundrobin")
+    greedy = ame_pim_expert_placement(prof, 4, replicate=4)
+    assert greedy.max_over_mean <= 1.15
+    assert greedy.worst_layer_max_over_mean < rr.worst_layer_max_over_mean
+    assert greedy.max_over_mean < rr.max_over_mean
+
+
+def test_roundrobin_zero_replication_is_legacy_map():
+    prof = zipf_routing(5, 8, 1024, seed=7)
+    rr = ame_pim_expert_placement(prof, 4, replicate=0, policy="roundrobin")
+    for row in rr.homes:
+        assert row == tuple((e % 4,) for e in range(8))
+
+
+def test_replication_copy_counts():
+    prof = zipf_routing(4, 8, 4096, alpha=1.0, seed=3)
+    plc = ame_pim_expert_placement(prof, 4, replicate=2)
+    for layer in range(prof.n_layers):
+        row = prof.counts[layer]
+        by_mass = sorted(range(8), key=lambda e: (-row[e], e))
+        hot, homes = by_mass[0], plc.homes[layer]
+        assert 2 <= len(homes[hot]) <= 4     # replicated, distinct stacks
+        assert len(set(homes[hot])) == len(homes[hot])
+        for e in by_mass[2:]:
+            assert len(homes[e]) == 1        # beyond top-2: single home
+    # one stack: replication is meaningless and must collapse to 1 copy
+    solo = ame_pim_expert_placement(prof, 1, replicate=4)
+    assert all(h == (0,) for row in solo.homes for h in row)
+
+
+def test_placement_validation():
+    prof = zipf_routing(2, 4, 128, seed=0)
+    with pytest.raises(ValueError):
+        ame_pim_expert_placement(prof, 0)
+    with pytest.raises(ValueError):
+        ame_pim_expert_placement(prof, 2, policy="hash")
+
+
+def test_stack_map_default_unchanged():
+    cfg = _reduced_moe()
+    base = ame_pim_stack_map(cfg, 2)
+    n = cfg.moe.num_experts
+    assert base["experts"] == [e % 2 for e in range(n)]
+    assert "expert_placement" not in base
+    routed = ame_pim_stack_map(cfg, 2, profile=_profile(cfg), replicate=1)
+    assert routed["expert_placement"].replicate == 1
+    assert base["layers"] == routed["layers"]
+
+
+# ---------------------------------------------------------------------------
+# Routed decode offload
+# ---------------------------------------------------------------------------
+
+def test_routed_offload_validation():
+    cfg = _reduced_moe()
+    prof = _profile(cfg)
+    with pytest.raises(ValueError):          # dense config cannot route
+        DecodeOffload(get("qwen3-1.7b").reduced(), channels=4,
+                      routing=zipf_routing(2, 4, 64))
+    with pytest.raises(ValueError):          # async + routing unsupported
+        DecodeOffload(cfg, channels=4, stacks=2, routing=prof,
+                      async_mode=True)
+    with pytest.raises(ValueError):          # profile shape must match cfg
+        DecodeOffload(cfg, channels=4, stacks=2,
+                      routing=zipf_routing(2, 2, 64))
+
+
+def test_routed_offload_seed_deterministic():
+    cfg = _reduced_moe()
+    prof = _profile(cfg)
+
+    def run():
+        off = DecodeOffload(cfg, channels=4, stacks=2, routing=prof,
+                            replicate_experts=1)
+        recs = [off.step(4) for _ in range(3)]
+        return recs, list(off.tokens_per_stack), dict(off.moe_counters), \
+            emit_trace(off.rt.stack)
+
+    ra, rb = run(), run()
+    assert ra == rb
+
+
+def test_routed_offload_balances_and_hits_replicas():
+    cfg = _reduced_moe()
+    prof = _profile(cfg, tokens=2048)
+    off = DecodeOffload(cfg, channels=4, stacks=2, routing=prof,
+                        replicate_experts=1)
+    for _ in range(4):
+        off.step(8)
+    ms = off.moe_summary()
+    assert ms["routed_tokens"] > 0
+    assert sum(ms["tokens_per_stack"]) == ms["routed_tokens"]
+    assert ms["replica_hit_rate"] >= 0.0
+    assert ms["observed_max_over_mean"] < 2.0
+    assert "moe" in off.roofline()
+
+
+def test_routed_offload_metrics_counters():
+    cfg = _reduced_moe()
+    reg = MetricsRegistry()
+    off = DecodeOffload(cfg, channels=4, stacks=2, routing=_profile(cfg),
+                        replicate_experts=1, metrics=reg)
+    off.step(4)
+    snap = reg.snapshot()
+    assert snap["moe.routed_tokens"]["value"] \
+        == off.moe_counters["routed_tokens"]
+    assert snap["moe.replica_hits"]["value"] \
+        == off.moe_counters["replica_hits"]
+    assert snap["moe.tokens_stack0"]["value"] == off.tokens_per_stack[0]
+    assert snap["moe.tokens_stack1"]["value"] == off.tokens_per_stack[1]
+
+
+def test_set_routing_validates_and_keeps_placement():
+    cfg = _reduced_moe()
+    off = DecodeOffload(cfg, channels=4, stacks=2, routing=_profile(cfg),
+                        replicate_experts=1)
+    before = off._placement
+    with pytest.raises(ValueError):
+        off.set_routing(zipf_routing(1, 2, 64))
+    off.set_routing(_profile(cfg, seed=11))
+    assert off._placement is before          # swap distribution, not homes
+
+
+# ---------------------------------------------------------------------------
+# Migration under drift
+# ---------------------------------------------------------------------------
+
+def test_migration_fires_and_roundtrips():
+    cfg = _reduced_moe()
+    prof = _profile(cfg, seed=3)
+    drift = _profile(cfg, seed=43)
+    off = DecodeOffload(cfg, channels=4, stacks=2, routing=prof,
+                        replicate_experts=1, migrate_threshold=0.05,
+                        migrate_min_tokens=16, link_topology="switched")
+    off.step(4)
+    off.set_routing(drift)
+    for _ in range(4):
+        off.step(4)
+    assert off.moe_counters["migrations"] >= 1
+    reup = sum(n for led in off.rt.stack.all_links()
+               for k, n in led.events if k == "reupload")
+    assert reup > 0                          # moves charged on dest links
+    st = parse_trace(emit_trace(off.rt.stack))
+    assert st.migrate_events
+    for layer, expert, src, dst, nbytes in st.migrate_events:
+        assert nbytes == off.expert_bytes
+        assert 0 <= src < 2 and 0 <= dst < 2
+        assert 0 <= expert < cfg.moe.num_experts
+
+
+def test_no_migration_without_threshold():
+    cfg = _reduced_moe()
+    off = DecodeOffload(cfg, channels=4, stacks=2, routing=_profile(cfg),
+                        replicate_experts=1)
+    for _ in range(4):
+        off.step(8)
+    assert off.moe_counters["migrations"] == 0
+    st = parse_trace(emit_trace(off.rt.stack))
+    assert st.migrate_events == []
+
+
+# ---------------------------------------------------------------------------
+# Link topology: shared default strictly additive, switched per-stack
+# ---------------------------------------------------------------------------
+
+def test_shared_topology_default_additive():
+    cfg = _reduced_moe()
+
+    def run(**kw):
+        off = DecodeOffload(cfg, channels=4, stacks=2, **kw)
+        recs = [off.step(4) for _ in range(3)]
+        return off.rt.stack.link, recs, emit_trace(off.rt.stack)
+
+    bare, shared = run(), run(link_topology="shared")
+    assert bare[0] == shared[0]              # ==-equal ledgers
+    assert bare[1] == shared[1]
+    assert bare[2] == shared[2]              # byte-identical traces
+    st = parse_trace(bare[2])
+    assert st.link_stacks_seen == [] and st.migrate_events == []
+
+
+def test_switched_topology_trace_roundtrip():
+    cfg = _reduced_moe()
+    off = DecodeOffload(cfg, channels=4, stacks=2, routing=_profile(cfg),
+                        replicate_experts=1, link_topology="switched")
+    for _ in range(3):
+        off.step(4)
+    stack = off.rt.stack
+    assert len(stack.links) == 2
+    assert all(led.label == f"link{s}" for s, led in enumerate(stack.links))
+    tr = emit_trace(stack)
+    st = parse_trace(tr)
+    for s, led in enumerate(stack.links):
+        if led.events:
+            assert s in st.link_stacks_seen
+            assert st.host_link_bytes_per_link[s] == led.bytes
+    # reset preserves the topology, clears the ledgers
+    stack.reset()
+    assert len(stack.links) == 2
+    assert all(not led.events for led in stack.links)
+
+
+def test_switched_multicast_charges_source_once():
+    cfg = _reduced_moe()
+    prof = _profile(cfg, tokens=2048)
+
+    def xstack_bytes(topology):
+        off = DecodeOffload(cfg, channels=4, stacks=2, routing=prof,
+                            replicate_experts=1, link_topology=topology)
+        off.step(8)
+        return sum(n for led in off.rt.stack.all_links()
+                   for k, n in led.events if k == "xstack")
+
+    # the multicast union of off-home tokens can never exceed the
+    # shared topology's per-destination sum at equal routing
+    assert xstack_bytes("switched") <= xstack_bytes("shared")
+
+
+def test_bad_link_topology_rejected():
+    cfg = _reduced_moe()
+    with pytest.raises(ValueError):
+        DecodeOffload(cfg, channels=4, stacks=2, link_topology="mesh")

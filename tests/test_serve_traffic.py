@@ -307,6 +307,52 @@ def test_disaggregated_beats_colocated():
         < res["colo"]["max_decode_gap_s"]
 
 
+def test_bursty_goodput_no_better_than_poisson():
+    """Equal offered load, cv~2 arrival clumping: burst queues blow the
+    TTFT budget Poisson clears, so bursty goodput can only be <= the
+    Poisson point's (a win would mean the scheduler rewards congestion)."""
+    off = DecodeOffload(get("qwen3-1.7b"), channels=16)
+    cost = HostCostModel(off.cfg)
+    slots, max_new = 8, 16
+    probe = off.step(slots)
+    costs = {slots: (probe.pim_s, probe.h2d_bytes)}
+    step_s = probe.pim_s
+    per_tok = cost.flops_per_token / cost.peak_flops
+    prompt = max(512, int(max_new * step_s / slots / per_tok))
+    slo = SLO(ttft_s=4 * cost.prefill_s(prompt), tpot_s=1.3 * step_s)
+    cap = 1.0 / max(cost.prefill_s(prompt), max_new * step_s / slots)
+    res = {}
+    for label, mk in (("poisson", poisson_trace),
+                      ("bursty", lambda *a, **kw: bursty_trace(
+                          *a, cv=2.0, **kw))):
+        tr = mk(0.55 * cap, 80, seed=7, prompt_len=prompt, max_new=max_new)
+        srv = TrafficServer(off, slots=slots, disaggregate=True,
+                            chunk_tokens=2048, slo=slo, step_costs=costs)
+        srv.run(tr)
+        res[label] = srv.latency_summary()
+    assert res["bursty"]["goodput_rps"] \
+        <= res["poisson"]["goodput_rps"] + 1e-9
+    assert res["bursty"]["slo_attainment"] \
+        <= res["poisson"]["slo_attainment"] + 1e-9
+
+
+def test_traffic_server_routing_observed():
+    """A routed offload behind the traffic server exposes its observed
+    expert histogram; a dense one exposes None."""
+    from repro.serve.traffic import zipf_routing
+    cfg = get("mixtral-8x22b").reduced()
+    n_moe = cfg.n_layers - cfg.moe.first_dense_layers
+    prof = zipf_routing(n_moe, cfg.moe.num_experts, 256, seed=4)
+    off = DecodeOffload(cfg, channels=4, stacks=2, routing=prof,
+                        replicate_experts=1)
+    srv = TrafficServer(off, slots=2, chunk_tokens=32)
+    srv.run(poisson_trace(20.0, 12, seed=3, prompt_len=32, max_new=3))
+    assert srv.routing_observed is off.observed
+    assert srv.routing_observed.total_tokens > 0
+    dense = TrafficServer(_offload(), slots=2)
+    assert dense.routing_observed is None
+
+
 def test_colocated_chunking_bounds_decode_stall():
     """Smaller prefill chunks preempt less decode time per iteration:
     the worst inter-token gap must shrink with the chunk size."""
